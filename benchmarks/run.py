@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure + kernel/roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+SUITES = [
+    "benchmarks.fig6_speedup",
+    "benchmarks.fig7_area_power",
+    "benchmarks.fig8a_summary",
+    "benchmarks.fig8b_multibank",
+    "benchmarks.kernel_bench",
+    "benchmarks.serving_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite substrings")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    rows = []
+
+    def report(name: str, us_per_call: float, derived: str) -> None:
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in SUITES:
+        if only and not any(s in mod_name for s in only):
+            continue
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run(report)
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((mod_name, repr(e)))
+            print(f"{mod_name},0.0,ERROR {e!r}", flush=True)
+
+    n_miss = sum(1 for _, _, d in rows if "MISS" in d)
+    print(f"# {len(rows)} rows, {n_miss} band misses, {len(failures)} suite errors")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

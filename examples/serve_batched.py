@@ -1,0 +1,50 @@
+"""Batched serving example: prefill + jitted decode loop with the radix
+top-k / top-p sampler, mixed request lengths via left-padding.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import generate
+
+
+def main():
+    cfg = get_config("gemma3-4b", smoke=True)   # reduced gemma3 (windowed)
+    params = api.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    batch, prompt_len, new = 8, 16, 24
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab, (batch, prompt_len)),
+                          jnp.int32)
+
+    gen = jax.jit(lambda p, t, k: generate(
+        cfg, p, t, max_new_tokens=new, key=k, temperature=0.8,
+        top_k=32, top_p=0.9))
+    t0 = time.time()
+    out = gen(params, prompts, jax.random.key(1))
+    out.block_until_ready()
+    t1 = time.time()
+    out2 = gen(params, prompts, jax.random.key(2))
+    out2.block_until_ready()
+    t2 = time.time()
+
+    print(f"batch={batch} prompt={prompt_len} new={new}")
+    print(f"compile+run {t1 - t0:.2f}s; steady-state {t2 - t1:.3f}s "
+          f"({batch * new / (t2 - t1):.0f} tok/s on 1 CPU core)")
+    o = np.asarray(out)
+    assert ((o >= 0) & (o < cfg.vocab)).all()
+    assert not np.array_equal(np.asarray(out), np.asarray(out2)), \
+        "different sampling keys must differ"
+    print("sampled ids (first 2 rows):")
+    print(o[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Fault-tolerant checkpointing: atomic, async, auto-resume, elastic reshard.
+
+Design (matches what large fleets need, minus external deps):
+
+  * **atomic**: state is written to ``step_<n>.tmp/`` then ``os.replace``d to
+    ``step_<n>/`` — a preempted writer can never corrupt the latest
+    checkpoint; stale ``.tmp`` dirs are garbage-collected on restart.
+  * **async**: ``save()`` snapshots device arrays to host (blocking only on
+    the copy), then serializes on a background thread so the train loop
+    resumes immediately.  ``wait()`` joins in-flight writes (called before
+    exit / preemption).
+  * **auto-resume**: ``latest_step()`` / ``restore()`` pick the newest
+    complete checkpoint; data-iterator state (a step counter for the
+    deterministic pipeline) and RNG are part of the state tree.
+  * **elastic reshard**: arrays are saved UNSHARDED (per-leaf npz) with the
+    tree structure in a manifest; ``restore(target_shardings=...)`` places
+    each leaf onto the *current* mesh — restarting on a different pod count
+    or mesh shape requires no conversion step.
+  * **keep policy**: newest ``keep`` checkpoints retained.
+
+For multi-controller fleets, npz-per-leaf maps 1:1 onto a sharded-file layout
+(one file per leaf-shard); the single-process container writes one shard.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    keyed = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+        # GC any interrupted writes from a previous incarnation
+        for d in os.listdir(directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state, blocking: bool = False):
+        keyed, _ = _flatten(state)
+        host = {k: np.asarray(v) for k, v in keyed.items()}   # device -> host
+        self.wait()
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "keys": sorted(host)}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like, target_shardings=None):
+        """Restore into the structure of ``like``; optionally placing each
+        leaf with ``target_shardings`` (elastic reshard onto a new mesh)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        arrays = np.load(os.path.join(path, "arrays.npz"))
+        keyed, treedef = _flatten(like)
+        leaves = []
+        shard_leaves = (jax.tree.leaves(target_shardings)
+                        if target_shardings is not None else [None] * len(keyed))
+        for (key, ref), sh in zip(keyed.items(), shard_leaves):
+            arr = arrays[key]
+            if hasattr(ref, "dtype"):
+                arr = arr.astype(ref.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

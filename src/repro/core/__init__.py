@@ -1,0 +1,24 @@
+"""Core: column-skipping memristive in-memory sorting (paper's contribution).
+
+Layers:
+  * hardware-faithful simulators with exact cycle accounting
+    (:mod:`baseline18`, :mod:`colskip`, :mod:`multibank`),
+  * calibrated area/power/energy models (:mod:`costmodel`),
+  * JAX-native engines used by the framework (:mod:`jaxsort`, :mod:`topk`,
+    :mod:`distsort`).
+"""
+
+from .baseline18 import SortResult, baseline_sort
+from .colskip import colskip_sort
+from .costmodel import baseline_cost, colskip_cost, fmax_mhz, merge_cost
+from .datasets import DATASETS, make_dataset
+from .jaxsort import colskip_sort_jax
+from .multibank import multibank_colskip_sort
+from .topk import topk, topk_mask, to_sortable_uint
+
+__all__ = [
+    "SortResult", "baseline_sort", "colskip_sort", "multibank_colskip_sort",
+    "colskip_sort_jax", "topk", "topk_mask", "to_sortable_uint",
+    "baseline_cost", "colskip_cost", "merge_cost", "fmax_mhz",
+    "make_dataset", "DATASETS",
+]

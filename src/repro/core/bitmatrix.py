@@ -1,0 +1,66 @@
+"""Bit-planar memory model for 1T1R memristive in-memory sorting.
+
+A length-N array of w-bit unsigned numbers is stored with one memristor cell
+per bit, MSB on the leftmost column (paper Fig. 4).  We model the array as a
+boolean matrix ``bits[N, w]`` with ``bits[:, 0]`` the MSB column, plus helpers
+for the two near-memory primitives:
+
+  * CR (column read)  — read one bit-column restricted to surviving rows.
+  * RE (row exclusion) — knock out surviving rows whose bit is 1 when the
+    column is *mixed* (contains both 0s and 1s among survivors).
+
+The simulator in :mod:`repro.core.colskip` drives these primitives and counts
+cycles exactly the way the paper does (CR-dominated accounting).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["BitMatrix", "to_bits", "from_bits"]
+
+
+def to_bits(values: np.ndarray, w: int) -> np.ndarray:
+    """Pack ``values`` (uint) into a bool matrix ``[N, w]``, MSB first."""
+    v = np.asarray(values, dtype=np.uint64)
+    if w < 64 and np.any(v >= (np.uint64(1) << np.uint64(w))):
+        raise ValueError(f"values do not fit in {w} bits")
+    shifts = np.arange(w - 1, -1, -1, dtype=np.uint64)  # MSB..LSB
+    return ((v[:, None] >> shifts[None, :]) & np.uint64(1)).astype(bool)
+
+
+def from_bits(bits: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`to_bits` — returns uint64 values."""
+    n, w = bits.shape
+    shifts = np.arange(w - 1, -1, -1, dtype=np.uint64)
+    return (bits.astype(np.uint64) << shifts[None, :]).sum(axis=1, dtype=np.uint64)
+
+
+class BitMatrix:
+    """1T1R crossbar holding the array under sort, with CR/RE primitives."""
+
+    def __init__(self, values: np.ndarray, w: int):
+        self.w = int(w)
+        self.n = int(len(values))
+        self.bits = to_bits(values, w)  # [N, w]; column j==0 is the MSB
+
+    # Column index convention used throughout the simulators: *significance*
+    # index i in [0, w-1], where i = w-1 is the MSB (paper's i counts down
+    # from MSB to LSB).  Internally column w-1-i of ``self.bits``.
+
+    def column(self, sig: int) -> np.ndarray:
+        """CR: the full bit column at significance ``sig`` (bool[N])."""
+        return self.bits[:, self.w - 1 - sig]
+
+    def read(self, sig: int, alive: np.ndarray) -> np.ndarray:
+        """CR restricted to surviving rows — what the sense amps observe."""
+        return self.column(sig) & alive
+
+    def mixed(self, sig: int, alive: np.ndarray) -> bool:
+        """True iff the column has both 0s and 1s among surviving rows."""
+        col = self.column(sig)[alive]
+        return bool(col.any()) and not bool(col.all())
+
+    def exclude(self, sig: int, alive: np.ndarray) -> np.ndarray:
+        """RE: drop surviving rows whose bit is 1 (the non-minima)."""
+        return alive & ~self.column(sig)

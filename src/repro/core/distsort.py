@@ -1,0 +1,79 @@
+"""Multi-bank management on a device mesh (paper §IV -> `shard_map`).
+
+The multi-bank manager's OR-gates become collective reductions over a mesh
+axis: each device is a "bank" holding a shard of the trailing axis, local
+predicates/counts are combined with ``psum``/``pmax`` per bit plane, and every
+bank then applies the globally-consistent decision — exactly the circuit's
+``en_sync`` broadcast.
+
+Used by gradient compression (global top-k threshold across data-parallel
+shards) and by the distributed sampler.  All functions are written to be
+called INSIDE ``shard_map`` with ``axis_name`` bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .topk import to_sortable_uint
+
+__all__ = ["kth_largest_sharded", "topk_mask_sharded", "global_min_sharded"]
+
+
+def kth_largest_sharded(u_local: jax.Array, k: int, axis_name: str) -> jax.Array:
+    """k-th largest over the concatenation of all banks' trailing axes.
+
+    ``u_local`` is the local sortable-uint shard ``(..., N_local)``; returns
+    the global k-th largest (broadcast to every bank).  One ``psum`` of a
+    per-batch count per bit plane — the ICI realization of the multi-bank
+    manager's global mixed-column judgement.
+    """
+
+    def step(carry, plane):
+        prefix, need = carry
+        bit = jnp.uint32(1) << plane
+        hi_mask = ~((bit << jnp.uint32(1)) - jnp.uint32(1))
+        cand = (u_local & hi_mask) == prefix[..., None]
+        c1_local = (cand & ((u_local & bit) != 0)).sum(axis=-1)
+        c1 = jax.lax.psum(c1_local, axis_name)          # manager OR/sum gate
+        take_hi = c1 >= need
+        prefix = jnp.where(take_hi, prefix | bit, prefix)
+        need = jnp.where(take_hi, need, need - c1)
+        return (prefix, need), None
+
+    prefix0 = jnp.zeros(u_local.shape[:-1], jnp.uint32)
+    need0 = jnp.full(u_local.shape[:-1], k, jnp.int32)
+    planes = jnp.arange(31, -1, -1, dtype=jnp.uint32)
+    (prefix, _), _ = jax.lax.scan(step, (prefix0, need0), planes)
+    return prefix
+
+
+def topk_mask_sharded(x_local: jax.Array, k: int, axis_name: str) -> jax.Array:
+    """Local boolean mask of the *global* top-k set.
+
+    Ties at the threshold are broken bank-major then index-major (bank order =
+    axis index), mirroring the manager's one-bank-at-a-time output select.
+    Exactly k elements are selected globally.
+    """
+    u = to_sortable_uint(x_local)
+    t = kth_largest_sharded(u, k, axis_name)[..., None]
+    gt = u > t
+    eq = u == t
+    # global tie budget: k - (#global > t), assigned in bank order
+    n_gt = jax.lax.psum(gt.sum(axis=-1), axis_name)
+    need_eq = (k - n_gt)[..., None]
+    eq_local = eq.sum(axis=-1)
+    # exclusive prefix over banks of local eq counts
+    bank = jax.lax.axis_index(axis_name)
+    nbanks = jax.lax.axis_size(axis_name)
+    eq_all = jax.lax.all_gather(eq_local, axis_name)            # (C, ...)
+    earlier = (jnp.arange(nbanks) < bank).reshape((nbanks,) + (1,) * eq_local.ndim)
+    before = (eq_all * earlier).sum(axis=0)
+    eq_rank = jnp.cumsum(eq, axis=-1) - 1 + before[..., None]
+    return gt | (eq & (eq_rank < need_eq))
+
+
+def global_min_sharded(u_local: jax.Array, axis_name: str) -> jax.Array:
+    """Global min over banks — the paper's single min-search, one collective."""
+    return jax.lax.pmin(u_local.min(axis=-1), axis_name)

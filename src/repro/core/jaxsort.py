@@ -1,0 +1,113 @@
+"""JIT-able column-skipping sort in pure ``jax.lax`` control flow.
+
+Functionally identical to :func:`repro.core.colskip.colskip_sort` (the numpy
+hardware model) including exact CR/drain cycle counts — cross-validated in
+tests.  Shapes are static: N elements, w bit planes, k state entries; the
+data-dependent skipping lives in carried loop state, exactly like the
+near-memory state controller.
+
+This is the form the framework actually jits/vmaps; it is also the oracle the
+Pallas kernel (:mod:`repro.kernels.colskip`) is tested against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["colskip_sort_jax"]
+
+
+class _State(NamedTuple):
+    sorted_mask: jax.Array    # (N,) bool
+    table_sigs: jax.Array     # (k,) int32, most-recent-first
+    table_masks: jax.Array    # (k, N) bool
+    table_valid: jax.Array    # (k,) bool
+    s_top: jax.Array          # () int32
+    out_pos: jax.Array        # (N,) int32 — sorted position of each row
+    count: jax.Array          # () int32
+    crs: jax.Array            # () int32
+    drains: jax.Array         # () int32
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2):
+    """Sort ``values`` (uint32 (N,)) ascending with the column-skipping HW model.
+
+    Returns ``(sorted_values, order, column_reads, cycles)``.
+    """
+    values = values.astype(jnp.uint32)
+    n = values.shape[0]
+    karr = max(1, k)
+
+    def load(st: _State):
+        """SL: most recent live entry; lazily invalidate dead top entries."""
+        unsorted = ~st.sorted_mask
+        live = st.table_valid & (st.table_masks & unsorted[None, :]).any(axis=1)
+        exists = live.any()
+        first = jnp.argmax(live)  # index of most recent live entry
+        # pop (invalidate) dead entries stacked above the live one
+        idx = jnp.arange(karr)
+        valid = jnp.where(exists, st.table_valid & (idx >= first), jnp.zeros_like(st.table_valid))
+        alive = jnp.where(
+            exists, st.table_masks[first] & unsorted, unsorted
+        )
+        start = jnp.where(exists, st.table_sigs[first] - 1, st.s_top)
+        fresh = ~exists
+        return alive, start.astype(jnp.int32), fresh, valid
+
+    def traverse(alive, start, fresh, st: _State):
+        def step(j, carry):
+            alive, sigs, masks, valid, s_top, seen, crs = carry
+            sig = jnp.int32(w - 1 - j)
+            active = sig <= start
+            col = ((values >> sig.astype(jnp.uint32)) & 1).astype(bool)
+            any1 = (col & alive).any()
+            any0 = (~col & alive).any()
+            mixed = active & any1 & any0
+            new_alive = jnp.where(mixed, alive & ~col, alive)
+            # SR: push entry during fresh traversals at mixed columns
+            rec = mixed & fresh & (k > 0)
+            sigs = jnp.where(rec, jnp.concatenate([sig[None], sigs[:-1]]), sigs)
+            masks = jnp.where(rec, jnp.concatenate([new_alive[None], masks[:-1]]), masks)
+            valid = jnp.where(
+                rec, jnp.concatenate([jnp.ones((1,), bool), valid[:-1]]), valid
+            )
+            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
+            seen = seen | (mixed & fresh)
+            crs = crs + active.astype(jnp.int32)
+            return new_alive, sigs, masks, valid, s_top, seen, crs
+
+        init = (alive, st.table_sigs, st.table_masks, st.table_valid,
+                st.s_top, jnp.bool_(False), st.crs)
+        return jax.lax.fori_loop(0, w, step, init)
+
+    def body(st: _State) -> _State:
+        alive, start, fresh, valid0 = load(st)
+        st = st._replace(table_valid=valid0)
+        alive, sigs, masks, valid, s_top, _, crs = traverse(alive, start, fresh, st)
+        m = alive.sum().astype(jnp.int32)
+        rank = jnp.cumsum(alive) - 1
+        out_pos = jnp.where(alive, st.count + rank, st.out_pos)
+        return _State(
+            sorted_mask=st.sorted_mask | alive,
+            table_sigs=sigs, table_masks=masks, table_valid=valid,
+            s_top=s_top, out_pos=out_pos,
+            count=st.count + m, crs=crs, drains=st.drains + m - 1,
+        )
+
+    st0 = _State(
+        sorted_mask=jnp.zeros((n,), bool),
+        table_sigs=jnp.zeros((karr,), jnp.int32),
+        table_masks=jnp.zeros((karr, n), bool),
+        table_valid=jnp.zeros((karr,), bool),
+        s_top=jnp.int32(w - 1),
+        out_pos=jnp.zeros((n,), jnp.int32),
+        count=jnp.int32(0), crs=jnp.int32(0), drains=jnp.int32(0),
+    )
+    st = jax.lax.while_loop(lambda s: s.count < n, body, st0)
+    order = jnp.zeros((n,), jnp.int32).at[st.out_pos].set(jnp.arange(n, dtype=jnp.int32))
+    return values[order], order, st.crs, st.crs + st.drains

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticCorpus, LengthBucketer
+
+__all__ = ["SyntheticCorpus", "LengthBucketer"]

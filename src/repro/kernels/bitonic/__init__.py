@@ -1,0 +1,4 @@
+from .ops import bitonic_sort
+from .kernel import n_passes
+
+__all__ = ["bitonic_sort", "n_passes"]

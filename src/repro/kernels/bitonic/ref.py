@@ -1,0 +1,7 @@
+"""Oracle: jnp.sort over the trailing axis."""
+
+import jax.numpy as jnp
+
+
+def sort_ref(x):
+    return jnp.sort(x.astype(jnp.uint32), axis=-1)

@@ -1,0 +1,3 @@
+from .ops import colskip_sort_batched
+
+__all__ = ["colskip_sort_batched"]

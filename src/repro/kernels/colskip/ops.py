@@ -1,0 +1,22 @@
+"""Public op over the colskip sort kernel (TPU -> Pallas, else oracle)."""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def colskip_sort_batched(x, w: int = 32, k: int = 2, *,
+                         use_pallas: bool | None = None,
+                         interpret: bool | None = None):
+    """Sort rows of ``x`` (B, N) uint32; returns (values, order, CRs, cycles).
+
+    CR/cycle telemetry is the paper's latency metric (fed to the cost model).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or bool(interpret)
+    if use_pallas:
+        return _k.sort_pallas(x, w, k, interpret=True if interpret is None else interpret)
+    return _ref.sort_ref(x, w, k)

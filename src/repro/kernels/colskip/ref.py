@@ -1,0 +1,14 @@
+"""Oracle for the colskip sort kernel: vmapped `colskip_sort_jax`,
+which is itself cross-validated (values + exact cycle counts) against the
+numpy hardware model in tests/test_core_sorting.py."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.jaxsort import colskip_sort_jax
+
+
+def sort_ref(x, w: int = 32, k: int = 2):
+    """(B, N) uint32 -> (values, order, column_reads, cycles), batched."""
+    return jax.vmap(lambda v: colskip_sort_jax(v, w, k))(x)

@@ -1,0 +1,3 @@
+from .ops import radix_topk, radix_topk_threshold, topk_mask_from_threshold
+
+__all__ = ["radix_topk", "radix_topk_threshold", "topk_mask_from_threshold"]

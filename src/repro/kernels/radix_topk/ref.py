@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the radix_topk kernel.
+
+Built on :mod:`repro.core.topk`, which is itself validated against
+``jax.lax.top_k`` (values, indices, and tie ordering).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.topk import kth_largest_sortable, to_sortable_uint, topk
+
+
+def threshold_ref(x, k):
+    """(B, N) -> per-row sortable-uint32 threshold of the k-th largest."""
+    return kth_largest_sortable(to_sortable_uint(x.astype(jnp.float32)), k)
+
+
+def topk_ref(x, k):
+    """(…, N) -> (values, indices) descending, lax.top_k tie rules."""
+    return topk(x, k)

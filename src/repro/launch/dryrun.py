@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the step function (train_step for train
+shapes, prefill_step / decode_step for inference shapes), the exact
+in/out shardings from dist/sharding.py, ShapeDtypeStruct inputs from
+models/api.input_specs, and runs ``jit(...).lower(...).compile()`` on the
+production mesh (16x16 single-pod or 2x16x16 multi-pod; 512 placeholder CPU
+devices).  It prints ``memory_analysis()`` (fits per device) and
+``cost_analysis()`` (FLOPs / bytes for the roofline), parses collective bytes
+from the compiled HLO, and writes a JSON record under experiments/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --mesh single [--variant opt]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, cells
+from repro.configs.base import SHAPES
+from repro.dist import sharding as shd
+from repro.models import api
+from repro.train.loop import make_train_step
+from repro.train.optimizer import adamw_init
+from .analytic import inner_scan_correction
+from .mesh import make_production_mesh
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms, collective_bytes
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(cfg, mesh, specs):
+    dp = shd.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        lead = dp if b % dp_size == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, specs)
+
+
+def _model_flops(cfg, cell) -> float:
+    n_active = cfg.active_param_count() - cfg.vocab * cfg.d_model  # non-embed
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_cell(cfg, cell, mesh, unroll=False, variant="base"):
+    """Returns (fn, example_args pytree of ShapeDtypeStruct, in_shardings).
+
+    Variants (§Perf hillclimb knobs):
+      serve_tp — decode cells: disable FSDP on params (serving should not
+                 re-gather weights every token step);
+      kv8      — decode cells (transformer family): int8-quantized KV cache;
+      mbN      — train cells: override the microbatch count to N.
+    """
+    aspecs = shd.act_specs(mesh)
+    kv_quant = "kv8" in variant          # variants compose: serve_tp_kv8
+    no_fsdp_sizes = {"model": 16, "data": 1 << 62, "pod": 1 << 62}
+
+    if cell.kind == "train":
+        # bound activation-checkpoint memory: L x B_mb/dp x S x d x 2B <= ~4GiB
+        dp = shd.dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        act_bytes = (cell.global_batch // dp_size) * cell.seq_len *             cfg.d_model * cfg.n_layers * 2
+        micro = 1
+        if not unroll:
+            micro = max(1, min(cell.global_batch // dp_size,
+                               -(-act_bytes // (4 * 2**30))))
+            while (cell.global_batch // dp_size) % micro:
+                micro += 1
+        if variant.startswith("mb") and not unroll:
+            micro = int(variant[2:])
+        step = make_train_step(cfg, act_specs=aspecs, unroll=unroll,
+                               microbatches=micro)
+        params_s = jax.eval_shape(lambda: api.init(cfg, jax.random.key(0)))
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        state_s = {"params": params_s, "opt": opt_s}
+        pspec = shd.param_specs(params_s)
+        state_spec = {
+            "params": pspec,
+            "opt": {"master": pspec,
+                    "m": pspec,
+                    "v": pspec,
+                    "step": P()},
+        }
+        batch_s = api.input_specs(cfg, cell)
+        in_sh = (_named(mesh, state_spec), _batch_shardings(cfg, mesh, batch_s))
+        return step, (state_s, batch_s), in_sh, (0,)
+
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            return api.prefill(cfg, params, batch, act_specs=aspecs,
+                               unroll=unroll)
+
+        params_s = jax.eval_shape(lambda: api.init(cfg, jax.random.key(0)))
+        pspec = shd.param_specs(params_s)
+        batch_s = api.input_specs(cfg, cell)
+        in_sh = (_named(mesh, pspec), _batch_shardings(cfg, mesh, batch_s))
+        return prefill_step, (params_s, batch_s), in_sh, ()
+
+    # decode: one new token against a seq_len KV cache
+    def serve_step(params, token, cache, cache_len):
+        return api.decode_step(cfg, params, token, cache, cache_len,
+                               act_specs=aspecs, unroll=unroll)
+
+    params_s = jax.eval_shape(lambda: api.init(cfg, jax.random.key(0)))
+    pspec = shd.param_specs(
+        params_s, axis_sizes=no_fsdp_sizes if "serve_tp" in variant else None)
+    b = cell.global_batch
+    cache_s = api.cache_specs(cfg, b, cell.seq_len, quant=kv_quant)
+    kinds = api.cache_kinds(cfg, quant=kv_quant)
+    cache_spec = {k: shd.cache_spec(mesh, b, kind=kinds[k]) for k in cache_s}
+    token_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    dp = shd.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = P(dp if b % dp_size == 0 else None, None)
+    in_sh = (_named(mesh, pspec), NamedSharding(mesh, tok_spec),
+             _named(mesh, cache_spec), NamedSharding(mesh, P()))
+    args = (params_s, token_s, cache_s, jax.ShapeDtypeStruct((), jnp.int32))
+    return serve_step, args, in_sh, (2,)
+
+
+def _probe_cost(cfg, cell, mesh, n_layers, variant="base"):
+    """Lower an UNROLLED shallow variant; returns (cost dict, coll bytes)."""
+    pcfg = dataclasses.replace(
+        cfg, n_layers=n_layers,
+        n_enc_layers=(n_layers if cfg.n_enc_layers else 0))
+    fn, args, in_sh, _ = build_cell(pcfg, cell, mesh, unroll=True,
+                                    variant=variant)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+    return compiled.cost_analysis(), collective_bytes(compiled.as_text())["total"]
+
+
+def _corrected_roofline(cfg, cell, mesh, n_chips, model_flops,
+                        variant="base"):
+    """Loop-corrected roofline: cost_analysis counts scan bodies once, so we
+    extrapolate from unrolled L=1/L=2 probes (total = nonloop + L*delta) and
+    add analytic inner-scan terms (flash / wkv / ssm).  See EXPERIMENTS.md
+    §Roofline methodology."""
+    c1, x1 = _probe_cost(cfg, cell, mesh, 1, variant)
+    c2, x2 = _probe_cost(cfg, cell, mesh, 2, variant)
+    L = cfg.n_layers
+    out = {}
+    for key, probe_key in (("flops", "flops"), ("hbm_bytes", "bytes accessed")):
+        v1, v2 = float(c1.get(probe_key, 0.0)), float(c2.get(probe_key, 0.0))
+        delta = max(0.0, v2 - v1)
+        out[key] = max(v1 - delta, 0.0) + L * delta
+    dx = max(0.0, x2 - x1)
+    out["coll_bytes"] = max(x1 - dx, 0.0) + L * dx
+    corr = inner_scan_correction(cfg, cell)
+    out["flops"] += corr["flops"] / n_chips
+    out["hbm_bytes"] += corr["bytes"] / n_chips
+    out["t_compute"] = out["flops"] / PEAK_FLOPS
+    out["t_memory"] = out["hbm_bytes"] / HBM_BW
+    out["t_collective"] = out["coll_bytes"] / ICI_BW
+    terms = {k: out[f"t_{k}"] for k in ("compute", "memory", "collective")}
+    out["bottleneck"] = max(terms, key=terms.get)
+    out["model_flops"] = model_flops
+    out["useful_ratio"] = (model_flops / (out["flops"] * n_chips)
+                           if out["flops"] else 0.0)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             variant: str = "base") -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "variant": variant,
+           "status": "ok"}
+    for sh, skip in cells(arch):
+        if sh.name == shape and skip:
+            rec.update(status="skip", reason=skip)
+            print(json.dumps(rec))
+            os.makedirs(out_dir, exist_ok=True)
+            suffix = "" if variant == "base" else f"_{variant}"
+            path = os.path.join(out_dir,
+                                f"{arch}_{shape}_{mesh_name}{suffix}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        fn, args, in_sh, donate = build_cell(cfg, cell, mesh, variant=variant)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rl = roofline_terms(cost, hlo, n_chips,
+                            model_flops=_model_flops(cfg, cell))
+        # roofline table is single-pod only (spec); multi-pod proves sharding
+        corrected = (None if multi_pod else
+                     _corrected_roofline(cfg, cell, mesh, n_chips,
+                                         _model_flops(cfg, cell), variant))
+        rec.update(
+            compile_s=round(time.time() - t0, 1),
+            mem=dict(
+                args_gb=round(ma.argument_size_in_bytes / 2**30, 3),
+                temp_gb=round(ma.temp_size_in_bytes / 2**30, 3),
+                out_gb=round(ma.output_size_in_bytes / 2**30, 3),
+            ),
+            collectives={k: v for k, v in coll.items() if v},
+            roofline_raw=rl.as_dict(),
+            roofline=corrected,
+        )
+        c = corrected
+        print(f"== {arch} x {shape} x {mesh_name} ==")
+        print(f"memory_analysis: arg={rec['mem']['args_gb']}GiB "
+              f"temp={rec['mem']['temp_gb']}GiB out={rec['mem']['out_gb']}GiB")
+        print(f"cost_analysis(raw, scan-bodies-once): flops/chip={rl.flops:.3e} "
+              f"bytes/chip={rl.hbm_bytes:.3e} coll/chip={rl.coll_bytes:.3e}")
+        if c is not None:
+            print(f"roofline(corrected): compute={c['t_compute']*1e3:.2f}ms "
+                  f"memory={c['t_memory']*1e3:.2f}ms "
+                  f"collective={c['t_collective']*1e3:.2f}ms "
+                  f"-> {c['bottleneck']}-bound; useful={c['useful_ratio']:.2f}")
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"== {arch} x {shape} x {mesh_name} == FAIL {e}", file=sys.stderr)
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if variant == "base" else f"_{variant}"
+    path = os.path.join(out_dir, f"{arch}_{shape}_{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    combos = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    n_fail = 0
+    for arch, shape in combos:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out, args.variant)
+            n_fail += rec["status"] == "fail"
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

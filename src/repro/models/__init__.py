@@ -1,0 +1,3 @@
+from . import api, blocks, hymba, moe, rwkv6, transformer, whisper
+
+__all__ = ["api", "blocks", "hymba", "moe", "rwkv6", "transformer", "whisper"]

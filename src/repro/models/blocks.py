@@ -1,0 +1,327 @@
+"""Shared model-building blocks (pure JAX, sharding-annotated).
+
+Conventions:
+  * params are nested dicts of jnp arrays; initializers take an rng key,
+  * activations flow as (batch, seq, d_model) in cfg.dtype (bf16 default),
+  * logical sharding is applied by the caller (dist/sharding.py) on params;
+    activation constraints are inserted at block boundaries via ``shard_act``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+
+# ---------------------------------------------------------------- helpers
+
+def dtype_of(cfg: ModelCfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim, out_dim, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def shard_act(x, spec):
+    """Best-effort activation sharding constraint (no-op outside a mesh)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def vocab_mask(cfg: ModelCfg, dtype=None):
+    """(padded_vocab,) additive mask: 0 on real ids, -1e30 on padding rows."""
+    import jax.numpy as _jnp
+    ids = _jnp.arange(cfg.padded_vocab)
+    m = _jnp.where(ids < cfg.vocab, 0.0, -1e30)
+    return m.astype(dtype or _jnp.float32)
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(cfg: ModelCfg, key, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((d,), dtype_of(cfg))}
+    return {"scale": jnp.ones((d,), dtype_of(cfg)),
+            "bias": jnp.zeros((d,), dtype_of(cfg))}
+
+
+def apply_norm(cfg: ModelCfg, p, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections):
+    """Qwen2-VL multimodal RoPE: positions3 (B, S, 3) = (t, h, w) ids;
+    frequency channels are split into `sections` (summing to Dh/2), each
+    rotated by its own position stream."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)       # (Dh/2,)
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    assert sec_id.shape[0] == dh // 2, "mrope sections must sum to Dh/2"
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.asarray(sec_id, jnp.int32)[None, None, :], axis=-1)   # (B, S, Dh/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attn_params(cfg: ModelCfg, key):
+    dt = dtype_of(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qd, kvd = cfg.n_heads * cfg.head_dim, cfg.n_kv * cfg.head_dim
+    p = {
+        "wq": dense_init(kq, cfg.d_model, qd, dt),
+        "wk": dense_init(kk, cfg.d_model, kvd, dt),
+        "wv": dense_init(kv, cfg.d_model, kvd, dt),
+        "wo": dense_init(ko, qd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    return p
+
+
+def _qkv(cfg: ModelCfg, p, x, positions):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q, k, v, mask, cfg: ModelCfg):
+    """(B,S,H,Dh) x (B,T,KV,Dh) grouped attention; fp32 softmax."""
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def decode_attention_quant(cfg: ModelCfg, p, x, positions, cache_k, cache_v,
+                           k_scale, v_scale, cache_len, window=None):
+    """decode_attention over an int8 cache with per-(slot, head) fp32 scales
+    (the kv8 serving variant): new K/V are absmax-quantized on write, the
+    cache is dequantized on read (fused by XLA into the attention matmuls)."""
+    q, k, v = _qkv(cfg, p, x, positions)      # s == 1
+    def quantize(t):
+        scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return q8, scale
+    k8, ks_new = quantize(k)
+    v8, vs_new = quantize(v)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k8, cache_len, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v8, cache_len, 1)
+    k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks_new, cache_len, 1)
+    v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs_new, cache_len, 1)
+    deq = lambda c8, sc: (c8.astype(x.dtype) *
+                          sc.astype(x.dtype)[..., None])
+    t_ = cache_k.shape[1]
+    kpos = jnp.arange(t_)
+    valid = kpos <= cache_len
+    if window is not None:
+        valid &= kpos > cache_len - window
+    mask = valid[None, None, None, None, :]
+    out = sdpa(q, deq(cache_k, k_scale), deq(cache_v, v_scale), mask, cfg)
+    b = x.shape[0]
+    return (out.reshape(b, 1, -1) @ p["wo"], cache_k, cache_v,
+            k_scale, v_scale)
+
+
+FLASH_BLOCK = 512
+FLASH_MIN_SEQ = 2048
+
+
+def sdpa_blockwise(q, k, v, window, cfg: ModelCfg, block=FLASH_BLOCK):
+    """Memory-efficient causal attention (flash-style online softmax).
+
+    Double scan over (q-chunk, kv-chunk) with running (max, denom, acc) —
+    peak temp is one (B, KV, G, block, block) fp32 tile instead of the full
+    (S, S) score tensor.  ``window``: traced scalar, 0/negative => full
+    causal; kv-chunks fully outside the window/causal region still execute
+    (uniform control flow) but are masked — block-level skipping is a
+    recorded §Perf item.
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    nq, nk = s // block, s // block
+    assert s % block == 0, f"seq {s} must be a multiple of block {block}"
+    qb = jnp.moveaxis(q.reshape(b, nq, block, kvh, g, dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, block, kvh, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, block, kvh, dh), 1, 0)
+    win = jnp.where(window > 0, window, s + 1)
+    scale = 1.0 / np.sqrt(dh)
+
+    def q_chunk(_, qi_and_q):
+        qi, qt = qi_and_q                              # qt: (B, blk, KV, G, Dh)
+
+        def kv_chunk(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kt, vt = ki_and_kv
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qt, kt).astype(jnp.float32)
+            sc = sc * scale
+            qpos = qi * block + jnp.arange(block)[:, None]
+            kpos = ki * block + jnp.arange(block)[None, :]
+            msk = (kpos <= qpos) & (kpos > qpos - win)
+            sc = jnp.where(msk[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vt.dtype), vt).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_chunk, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,G,blk,Dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_chunk, None, (jnp.arange(nq), qb))
+    # outs: (nq, B, KV, G, blk, Dh) -> (B, S, H, Dh)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+
+
+def attend(q, k, v, window, cfg: ModelCfg):
+    """Dispatch: blockwise for long sequences, direct for short/odd shapes.
+
+    ``window`` is a traced scalar (0 = full causal)."""
+    s = q.shape[1]
+    if s >= FLASH_MIN_SEQ and s % FLASH_BLOCK == 0:
+        return sdpa_blockwise(q, k, v, window, cfg)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - jnp.where(window > 0, window, s + 1))
+    return sdpa(q, k, v, mask[None, None, None], cfg)
+
+
+def causal_mask(s, t, window=None, q_offset=0):
+    """(1,1,1,s,t) mask; window=None -> plain causal (q_offset aligns decode)."""
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None, None]
+
+
+def self_attention(cfg: ModelCfg, p, x, positions, window=None, mask=None):
+    q, k, v = _qkv(cfg, p, x, positions)
+    s = x.shape[1]
+    if mask is None:
+        mask = causal_mask(s, s, window)
+    out = sdpa(q, k, v, mask, cfg)
+    b = x.shape[0]
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def decode_attention(cfg: ModelCfg, p, x, positions, cache_k, cache_v, cache_len,
+                     window=None):
+    """One-token decode against a (B, T, KV, Dh) ring cache.
+
+    Writes the new K/V at slot ``cache_len`` (functional update) and attends
+    over slots [0, cache_len] (window-clipped).  Returns (out, cache_k,
+    cache_v)."""
+    q, k, v = _qkv(cfg, p, x, positions)      # s == 1
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    t = cache_k.shape[1]
+    kpos = jnp.arange(t)
+    valid = kpos <= cache_len
+    if window is not None:
+        valid &= kpos > cache_len - window
+    mask = valid[None, None, None, None, :]    # (1,1,1,1,T)
+    out = sdpa(q, cache_k, cache_v, mask, cfg)
+    b = x.shape[0]
+    return out.reshape(b, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------- MLP / MoE
+
+def mlp_params(cfg: ModelCfg, key, d_ff=None, gated=True):
+    dt = dtype_of(cfg)
+    d_ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {"up": dense_init(ku, cfg.d_model, d_ff, dt),
+         "down": dense_init(kd, d_ff, cfg.d_model, dt)}
+    if gated:
+        p["gate"] = dense_init(kg, cfg.d_model, d_ff, dt)
+    return p
+
+
+def apply_mlp(cfg: ModelCfg, p, x):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if "gate" in p:
+        return (act(x @ p["gate"]) * (x @ p["up"])) @ p["down"]
+    return act(x @ p["up"]) @ p["down"]

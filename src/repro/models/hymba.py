@@ -1,0 +1,200 @@
+"""Hymba — hybrid-head LM: attention and Mamba(SSM) heads in parallel
+(arXiv:2411.13676).
+
+Each block feeds the normed input to BOTH a GQA attention branch (sliding
+window except layers {0, L/2, L-1}, which are global — the published layout)
+and a selective-SSM (Mamba) branch; the two outputs are per-branch normalized
+and averaged with learned gates β — the paper's "parallel hybrid heads".
+Meta-tokens are omitted (noted in DESIGN.md §6); KV sharing is not modeled.
+
+Decode state = window KV cache (attention) + conv tail & SSM state (Mamba):
+both O(window)/O(1), so the long_500k cell runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from . import blocks as B
+
+
+def _global_layers(cfg: ModelCfg):
+    return {0, cfg.n_layers // 2, cfg.n_layers - 1}
+
+
+def layer_windows(cfg: ModelCfg) -> np.ndarray:
+    w = np.full(cfg.n_layers, cfg.window or 1024, np.int32)
+    for i in _global_layers(cfg):
+        w[i] = 0
+    return w
+
+
+def _d_inner(cfg):
+    return cfg.ssm.expand * cfg.d_model
+
+
+def layer_params(cfg: ModelCfg, key):
+    dt = B.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    di, n = _d_inner(cfg), cfg.ssm.state_dim
+    p = {
+        "ln1": B.norm_params(cfg, ks[0]),
+        "ln2": B.norm_params(cfg, ks[1]),
+        "attn": B.attn_params(cfg, ks[2]),
+        "mlp": B.mlp_params(cfg, ks[3]),
+        "beta": jnp.zeros((2,), jnp.float32),            # branch mix gates
+        "ssm": {
+            "in_proj": B.dense_init(ks[4], cfg.d_model, 2 * di, dt),
+            "conv_w": (jax.random.normal(ks[5], (cfg.ssm.d_conv, di), jnp.float32)
+                       * 0.2).astype(dt),
+            "x_bc_dt": B.dense_init(ks[6], di, 2 * n + 1, dt),   # B, C, dt per ch grp
+            "a_log": jnp.zeros((di, n), jnp.float32),
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "dt_bias": jnp.full((di,), -4.0, jnp.float32),
+            "out_proj": B.dense_init(ks[7], di, cfg.d_model, dt),
+        },
+    }
+    return p
+
+
+def init_lm(cfg: ModelCfg, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: layer_params(cfg, k))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(B.dtype_of(cfg)),
+        "layers": stacked,
+        "final_norm": B.norm_params(cfg, kh),
+        "head": B.dense_init(kh, cfg.d_model, cfg.padded_vocab, B.dtype_of(cfg)),
+    }
+
+
+def _ssm_scan(u, dt_, Bm, Cm, a, state0):
+    """Selective SSM.  u: (B,S,di); dt_: (B,S,di); Bm/Cm: (B,S,n);
+    a: (di,n) negative; state: (B,di,n)."""
+    da = jnp.exp(dt_[..., None] * a)                   # (B,S,di,n) decay
+    dbu = dt_[..., None] * Bm[:, :, None, :] * u[..., None]
+
+    def step(s, inp):
+        da_t, dbu_t, c_t = inp                         # (B,di,n),(B,di,n),(B,n)
+        s = s * da_t + dbu_t
+        y = jnp.einsum("bdn,bn->bd", s, c_t)
+        return s, y
+
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbu, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state               # (B,S,di)
+
+
+def _mamba_branch(cfg, p, x, conv_tail, ssm_state):
+    """x: (B,S,d).  conv_tail: (B, d_conv-1, di) from previous chunk."""
+    b, s, _ = x.shape
+    di, n = _d_inner(cfg), cfg.ssm.state_dim
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                   # (B,S,di) each
+    # depthwise causal conv over time
+    upad = jnp.concatenate([conv_tail.astype(u.dtype), u], axis=1)
+    dc = p["conv_w"].shape[0]
+    conv = sum(upad[:, i:i + s] * p["conv_w"][i] for i in range(dc))
+    u = jax.nn.silu(conv)
+    new_tail = upad[:, -(dc - 1):] if dc > 1 else upad[:, :0]
+    bcdt = (u @ p["x_bc_dt"]).astype(jnp.float32)
+    Bm, Cm, dt_ = bcdt[..., :n], bcdt[..., n:2 * n], bcdt[..., 2 * n]
+    dt_ = jax.nn.softplus(dt_[..., None] + p["dt_bias"])        # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                    # (di,n)
+    y, ssm_state = _ssm_scan(u.astype(jnp.float32), dt_, Bm, Cm, a, ssm_state)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, new_tail, ssm_state
+
+
+def _norm_free(v, eps=1e-5):
+    v32 = v.astype(jnp.float32)
+    return (v32 * jax.lax.rsqrt(v32.var(-1, keepdims=True) + eps)).astype(v.dtype)
+
+
+def init_state(cfg: ModelCfg, batch, max_len):
+    """Decode state: KV cache + conv tail + SSM state per layer.
+
+    NOTE: the cache is allocated at ``max_len`` for every layer because
+    lax.scan requires uniform stacking; windowed layers only *attend* within
+    their window (compute O(w)) but over-allocate memory.  The ring-buffer
+    window cache is a recorded §Perf hillclimb item.
+    """
+    dt = B.dtype_of(cfg)
+    di = _d_inner(cfg)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dt),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.d_conv - 1, di), dt),
+        "ssm": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm.state_dim), jnp.float32),
+    }
+
+
+def forward(cfg: ModelCfg, params, batch, *, act_specs=None, remat=True,
+            unroll=False):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(B.dtype_of(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows = jnp.asarray(layer_windows(cfg))
+    di, n = _d_inner(cfg), cfg.ssm.state_dim
+
+    def body(x, xs):
+        lp, w = xs
+        h = B.apply_norm(cfg, lp["ln1"], x)
+        # attention branch (dynamic window; blockwise for long seqs)
+        q, k, v = B._qkv(cfg, lp["attn"], h, positions)
+        attn = B.attend(q, k, v, w, cfg)
+        attn = attn.reshape(b, s, -1) @ lp["attn"]["wo"]
+        # mamba branch
+        tail0 = jnp.zeros((b, cfg.ssm.d_conv - 1, di), x.dtype)
+        st0 = jnp.zeros((b, di, n), jnp.float32)
+        mam, _, _ = _mamba_branch(cfg, lp["ssm"], h, tail0, st0)
+        beta = jax.nn.sigmoid(lp["beta"])
+        mix = beta[0] * _norm_free(attn) + beta[1] * _norm_free(mam)
+        x = x + mix.astype(x.dtype)
+        x = x + B.apply_mlp(cfg, lp["mlp"], B.apply_norm(cfg, lp["ln2"], x))
+        x = B.shard_act(x, act_specs and act_specs.get("resid"))
+        return x, None
+
+    step = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(step, x, (params["layers"], windows),
+                        unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["head"] + B.vocab_mask(cfg, x.dtype)
+    return B.shard_act(logits, act_specs and act_specs.get("logits")), jnp.float32(0)
+
+
+def decode_step(cfg: ModelCfg, params, token, state, cache_len, *,
+                act_specs=None, unroll=False):
+    b = token.shape[0]
+    x = params["embed"][token].astype(B.dtype_of(cfg))
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        lp, w, ck, cv, conv_tail, sst = xs
+        h = B.apply_norm(cfg, lp["ln1"], x)
+        win = jnp.where(w > 0, w, ck.shape[1] + 1)
+        attn, ck, cv = B.decode_attention(cfg, lp["attn"], h, positions, ck, cv,
+                                          cache_len, window=win)
+        mam, conv_tail, sst = _mamba_branch(cfg, lp["ssm"], h, conv_tail, sst)
+        beta = jax.nn.sigmoid(lp["beta"])
+        mix = beta[0] * _norm_free(attn) + beta[1] * _norm_free(mam)
+        x = x + mix.astype(x.dtype)
+        x = x + B.apply_mlp(cfg, lp["mlp"], B.apply_norm(cfg, lp["ln2"], x))
+        x = B.shard_act(x, act_specs and act_specs.get("resid"))
+        return x, (ck, cv, conv_tail, sst)
+
+    x, (ck, cv, conv, sst) = jax.lax.scan(
+        body, x, (params["layers"], windows, state["k"], state["v"],
+                  state["conv"], state["ssm"]),
+        unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["head"] + B.vocab_mask(cfg, x.dtype)
+    logits = B.shard_act(logits, act_specs and act_specs.get("logits"))
+    return logits, {"k": ck, "v": cv, "conv": conv, "ssm": sst}

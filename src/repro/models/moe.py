@@ -1,0 +1,186 @@
+"""Mixture-of-Experts layer — routing runs on the paper's selection engine.
+
+Two places the sorting core is load-bearing:
+
+  * **router top-k**: per-token top-k over expert probabilities goes through
+    :func:`repro.kernels.radix_topk.radix_topk` (bit-plane descent; Pallas on
+    TPU, identical jnp algorithm elsewhere);
+  * **sort-based dispatch**: tokens are ordered by expert id (the standard
+    TPU MoE dispatch is literally a sort) and packed into per-expert capacity
+    buffers.
+
+Two dispatch implementations:
+
+  * ``sharded`` (production default under a mesh): `shard_map` expert
+    parallelism.  Tokens are batch-sharded and *replicated* along the
+    ``model`` axis, so each device simply selects the tokens routed to ITS
+    expert slice locally (zero dispatch communication), runs its expert
+    GEMMs, and one ``psum`` over ``model`` combines outputs.  Expert weights
+    are stored FSDP-sharded and gathered at the shard_map boundary (the
+    FSDP all-gather).  Expert count is padded to a multiple of the model
+    axis (granite's 40 -> 48; dead experts are never routed to).
+  * ``auto`` (GSPMD scatter/gather): kept for §Perf comparison — the
+    partitioner replicates the (E*C, d) scatter, costing ~273 GiB/chip of
+    collectives per layer at qwen3-235B scale (measured; see EXPERIMENTS.md).
+
+Capacity semantics follow GShard/Switch: ``C = ceil(T*k/E * cf)``, overflow
+tokens are dropped (their residual passes through).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.kernels.radix_topk import radix_topk
+from .blocks import dense_init, dtype_of, shard_act
+
+
+def padded_experts(cfg: ModelCfg, n_model: int = 16) -> int:
+    e = cfg.moe.n_experts
+    return -(-e // n_model) * n_model
+
+
+def moe_params(cfg: ModelCfg, key):
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, de = padded_experts(cfg), cfg.d_model, m.d_expert
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "router": dense_init(kr, d, m.n_experts, jnp.float32),
+        "gate": (jax.random.normal(kg, (e, d, de), jnp.float32) * scale).astype(dt),
+        "up": (jax.random.normal(ku, (e, d, de), jnp.float32) * scale).astype(dt),
+        "down": (jax.random.normal(kd, (e, de, d), jnp.float32) / np.sqrt(de)).astype(dt),
+    }
+
+
+def capacity(cfg: ModelCfg, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(np.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    # multiple of 256 so the capacity dim shards over any DP degree <= 256
+    return max(256, -(-c // 256) * 256)
+
+
+def _route(cfg: ModelCfg, router, xf):
+    """(T, d) -> (gate weights (T,k), expert ids (T,k), probs (T,E))."""
+    m = cfg.moe
+    logits = xf.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    if m.router_use_radix:
+        gate_vals, expert_idx = radix_topk(probs, m.top_k)
+    else:
+        gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)
+    weights = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    return weights, expert_idx, probs
+
+
+def _dispatch_compute(cfg, p, xf, weights, expert_idx, e_lo, e_count, c):
+    """Pack tokens routed to experts [e_lo, e_lo+e_count) into capacity
+    buffers, run the expert FFNs, and scatter-add back.  Pure local compute —
+    usable both per-shard (sharded path) and globally (auto path)."""
+    m = cfg.moe
+    t, d = xf.shape
+    tk = t * m.top_k
+    flat_e = expert_idx.reshape(tk)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)
+    flat_w = weights.reshape(tk).astype(xf.dtype)
+    order = jnp.argsort(flat_e, stable=True)                 # tokens by expert
+    se, stok, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=padded_experts(cfg))
+    offsets = jnp.cumsum(counts) - counts                    # exclusive
+    rank = jnp.arange(tk, dtype=jnp.int32) - offsets[se]
+    local = (se >= e_lo) & (se < e_lo + e_count)
+    keep = (rank < c) & local
+    slot = jnp.where(keep, (se - e_lo) * c + rank, e_count * c)
+
+    buf = jnp.zeros((e_count * c + 1, d), xf.dtype)
+    buf = buf.at[slot].set(xf[stok] * keep[:, None].astype(xf.dtype))
+    buf = buf[:-1].reshape(e_count, c, d)
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+    yf = jnp.concatenate([y.reshape(e_count * c, d),
+                          jnp.zeros((1, d), y.dtype)])
+    contrib = yf[slot]                                       # (TK, d)
+    out = jnp.zeros((t, d), xf.dtype).at[stok].add(contrib * sw[:, None])
+    return out
+
+
+def apply_moe(cfg: ModelCfg, p, x, *, act_specs=None):
+    """x: (B, S, d) -> (B, S, d); aux = router load-balance loss."""
+    mesh = act_specs.get("mesh") if act_specs else None
+    if mesh is not None and "model" in mesh.axis_names:
+        return _apply_moe_sharded(cfg, p, x, mesh, act_specs)
+    return _apply_moe_auto(cfg, p, x, act_specs)
+
+
+def _aux_loss(cfg, probs, expert_idx):
+    m = cfg.moe
+    tk = expert_idx.size
+    me = probs.mean(0)
+    fe = jnp.bincount(expert_idx.reshape(-1), length=m.n_experts) / tk
+    return m.n_experts * jnp.sum(fe * me)
+
+
+def _apply_moe_auto(cfg: ModelCfg, p, x, act_specs=None):
+    """GSPMD-auto dispatch (kept for §Perf baseline comparison)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    xf = shard_act(xf, act_specs and act_specs.get("tokens"))
+    weights, expert_idx, probs = _route(cfg, p["router"], xf)
+    c = capacity(cfg, t)
+    out = _dispatch_compute(cfg, p, xf, weights, expert_idx,
+                            0, padded_experts(cfg), c)
+    out = shard_act(out, act_specs and act_specs.get("tokens"))
+    return out.reshape(b, s, d), _aux_loss(cfg, probs, expert_idx)
+
+
+def _dpsize(mesh, dp):
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def _apply_moe_sharded(cfg: ModelCfg, p, x, mesh, act_specs):
+    """shard_map EP: local expert-select + expert GEMMs + one psum."""
+    from repro.dist.sharding import dp_axes     # no import cycle: dist is leaf
+    b, s, d = x.shape
+    dp = dp_axes(mesh)
+    n_model = mesh.shape["model"]
+    e_pad = p["gate"].shape[0]            # authoritative: init-time padding
+    assert e_pad % n_model == 0, (e_pad, n_model)
+    e_loc = e_pad // n_model
+    bspec = dp if b % _dpsize(mesh, dp) == 0 else None
+
+    def body(xl, router, gate, up, down):
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        xf = xl.reshape(t, d)
+        weights, expert_idx, probs = _route(cfg, router, xf)
+        c = capacity(cfg, t)
+        col = jax.lax.axis_index("model")
+        out = _dispatch_compute(cfg, {"gate": gate, "up": up, "down": down},
+                                xf, weights, expert_idx, col * e_loc, e_loc, c)
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(_aux_loss(cfg, probs, expert_idx),
+                            dp + ("model",))
+        return out.reshape(bl, sl, d), aux
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["gate"], p["up"], p["down"])

@@ -1,0 +1,164 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay (arXiv:2404.05892).
+
+Per head h (head_dim n): recurrent WKV state S in R^{n x n}:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(decay_t)) a *data-dependent* per-channel decay (the Finch
+novelty vs RWKV-5's static decay) and u a learned per-channel bonus.  Token
+shift (lerp of x_{t-1}, x_t) feeds r/k/v/g/decay projections; channel-mix is
+the standard RWKV squared-ReLU FFN with its own token shift.
+
+Training uses a time scan (chunked variant lives in the §Perf hillclimb);
+decode carries (S, x_prev) — O(1) state, which is why this arch runs the
+long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from . import blocks as B
+
+
+def layer_params(cfg: ModelCfg, key):
+    d = cfg.d_model
+    dt = B.dtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    n_h = cfg.n_heads
+    hd = cfg.head_dim
+    lora = 64                                  # decay LoRA rank (Finch)
+    return {
+        "ln1": B.norm_params(cfg, ks[0]),
+        "ln2": B.norm_params(cfg, ks[1]),
+        "mix": {
+            "mu": jnp.full((5, d), 0.5, dt),   # token-shift lerp for r,k,v,g,w
+            "wr": B.dense_init(ks[2], d, d, dt),
+            "wk": B.dense_init(ks[3], d, d, dt),
+            "wv": B.dense_init(ks[4], d, d, dt),
+            "wg": B.dense_init(ks[5], d, d, dt),
+            "wo": B.dense_init(ks[6], d, d, dt),
+            "w1": B.dense_init(ks[7], d, lora, dt),      # decay LoRA
+            "w2": B.dense_init(ks[8], lora, d, dt, scale=0.01),
+            "w0": jnp.full((d,), -5.0, jnp.float32),      # decay bias
+            "u": jnp.zeros((n_h, hd), jnp.float32),       # bonus
+            "gn": jnp.ones((d,), jnp.float32),            # group-norm scale
+        },
+        "ffn": {
+            "mu": jnp.full((2, d), 0.5, dt),
+            "wk": B.dense_init(ks[9], d, cfg.d_ff, dt),
+            "wv": B.dense_init(ks[9], cfg.d_ff, d, dt),
+            "wr": B.dense_init(ks[9], d, d, dt),
+        },
+    }
+
+
+def init_lm(cfg: ModelCfg, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: layer_params(cfg, k))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(B.dtype_of(cfg)),
+        "layers": stacked,
+        "final_norm": B.norm_params(cfg, kh),
+        "head": B.dense_init(kh, cfg.d_model, cfg.padded_vocab, B.dtype_of(cfg)),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: concat previous timestep; x (B,S,d) -> x_{t-1} stream."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); state: (B,H,hd,hd)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                      # (B,H,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)    # outer product
+        out = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = S * w_t[..., None] + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state            # (B,S,H,hd)
+
+
+def _time_mix(cfg, p, x, x_prev, state):
+    b, s, d = x.shape
+    n_h, hd = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, x_prev)
+    lerp = lambda i: x + (xs - x) * p["mu"][i]
+    r = (lerp(0) @ p["wr"]).reshape(b, s, n_h, hd).astype(jnp.float32)
+    k = (lerp(1) @ p["wk"]).reshape(b, s, n_h, hd).astype(jnp.float32)
+    v = (lerp(2) @ p["wv"]).reshape(b, s, n_h, hd).astype(jnp.float32)
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    decay = p["w0"] + (jnp.tanh(lerp(4) @ p["w1"]) @ p["w2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, n_h, hd)
+    out, state = _wkv_scan(r, k, v, w, p["u"], state)
+    out = out.reshape(b, s, d)
+    # per-head group norm
+    out = out.reshape(b, s, n_h, hd)
+    out = (out - out.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        out.var(-1, keepdims=True) + 1e-5)
+    out = (out.reshape(b, s, d) * p["gn"]).astype(x.dtype)
+    return (out * g) @ p["wo"], x[:, -1], state
+
+
+def _channel_mix(p, x, x_prev):
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["mu"][0]
+    xr = x + (xs - x) * p["mu"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1]
+
+
+def init_state(cfg: ModelCfg, batch):
+    """Recurrent state pytree (the 'cache' for an attention-free arch)."""
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, cfg.head_dim,
+                          cfg.head_dim), jnp.float32),
+        "x_tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), B.dtype_of(cfg)),
+        "x_cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), B.dtype_of(cfg)),
+    }
+
+
+def forward(cfg: ModelCfg, params, batch, *, act_specs=None, remat=True,
+            state=None, unroll=False):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(B.dtype_of(cfg))
+    st = state or init_state(cfg, b)
+
+    def body(x, xs):
+        lp, s_wkv, s_tm, s_cm = xs
+        h = B.apply_norm(cfg, lp["ln1"], x)
+        out, s_tm, s_wkv = _time_mix(cfg, lp["mix"], h, s_tm, s_wkv)
+        x = x + out
+        h2 = B.apply_norm(cfg, lp["ln2"], x)
+        out2, s_cm = _channel_mix(lp["ffn"], h2, s_cm)
+        x = x + out2
+        x = B.shard_act(x, act_specs and act_specs.get("resid"))
+        return x, (s_wkv, s_tm, s_cm)
+
+    step = jax.checkpoint(body) if remat else body
+    x, (s_wkv, s_tm, s_cm) = jax.lax.scan(
+        step, x, (params["layers"], st["wkv"], st["x_tm"], st["x_cm"]),
+        unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["head"] + B.vocab_mask(cfg, x.dtype)
+    logits = B.shard_act(logits, act_specs and act_specs.get("logits"))
+    return logits, {"wkv": s_wkv, "x_tm": s_tm, "x_cm": s_cm}
+
+
+def decode_step(cfg: ModelCfg, params, token, state, cache_len=None, *,
+                act_specs=None, unroll=False):
+    """O(1) decode: forward over a single token carrying recurrent state."""
+    logits, state = forward(cfg, params, {"tokens": token}, state=state,
+                            act_specs=act_specs, remat=False, unroll=unroll)
+    return logits, state

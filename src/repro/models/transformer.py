@@ -1,0 +1,248 @@
+"""Generic decoder LM covering the dense/MoE/windowed/M-RoPE families.
+
+One code path parameterized by :class:`ModelCfg` handles qwen3-moe,
+granite-moe, deepseek-coder, gemma3 (5:1 local:global), qwen1.5 (QKV bias),
+command-r (parallel block + LN), and qwen2-vl (M-RoPE + patch-embed stub).
+
+Layers are stacked (params have a leading L axis) and executed with
+``lax.scan`` + ``jax.checkpoint`` so the lowered HLO is one layer body —
+essential for 94-layer dry-run compiles at 512 devices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from . import blocks as B
+from .moe import apply_moe, moe_params
+
+
+# --------------------------------------------------------------- params
+
+def layer_params(cfg: ModelCfg, key):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": B.norm_params(cfg, ks[0]), "attn": B.attn_params(cfg, ks[1])}
+    if not cfg.parallel_block:
+        p["ln2"] = B.norm_params(cfg, ks[2])
+    if cfg.moe is not None:
+        p["moe"] = moe_params(cfg, ks[3])
+    else:
+        p["mlp"] = B.mlp_params(cfg, ks[3], gated=cfg.gated_mlp)
+    return p
+
+
+def init_lm(cfg: ModelCfg, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: layer_params(cfg, k))(layer_keys)
+    p = {
+        "embed": (jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(B.dtype_of(cfg)),
+        "layers": stacked,
+        "final_norm": B.norm_params(cfg, kh),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = B.dense_init(kh, cfg.d_model, cfg.padded_vocab, B.dtype_of(cfg))
+    if cfg.vision_patches:
+        p["patch_proj"] = B.dense_init(ke, cfg.d_model, cfg.d_model, B.dtype_of(cfg))
+    return p
+
+
+def layer_windows(cfg: ModelCfg) -> np.ndarray:
+    """Per-layer attention window (0 = full/global attention)."""
+    w = np.zeros(cfg.n_layers, np.int32)
+    if cfg.window:
+        w[:] = cfg.window
+        if cfg.window_pattern:   # every Nth layer global (gemma3: 6th)
+            w[cfg.window_pattern - 1::cfg.window_pattern] = 0
+    return w
+
+
+# --------------------------------------------------------------- forward
+
+def _mask_for(s, window, q_offset=0):
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(s)[None, :]
+    m = kpos <= qpos
+    m &= kpos > qpos - jnp.where(window > 0, window, s + 1)  # dynamic window
+    return m[None, None, None]
+
+
+def _block(cfg: ModelCfg, p, x, positions, window, act_specs):
+    h = B.apply_norm(cfg, p["ln1"], x)
+    q, k, v = B._qkv(cfg, p["attn"], h, positions)
+    attn = B.attend(q, k, v, window, cfg)
+    attn = attn.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"]
+    aux = jnp.float32(0)
+    if cfg.parallel_block:
+        mlp = B.apply_mlp(cfg, p["mlp"], h)
+        x = x + attn + mlp
+    else:
+        x = x + attn
+        h2 = B.apply_norm(cfg, p["ln2"], x)
+        if cfg.moe is not None:
+            y, aux = apply_moe(cfg, p["moe"], h2, act_specs=act_specs)
+        else:
+            y = B.apply_mlp(cfg, p["mlp"], h2)
+        x = x + y
+    x = B.shard_act(x, act_specs and act_specs.get("resid"))
+    return x, aux
+
+
+def embed_inputs(cfg: ModelCfg, params, batch):
+    """tokens (+ optional patch embeds for VLM) -> (B, S, d), positions."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(B.dtype_of(cfg))
+    if cfg.vision_patches and "patches" in batch:
+        pe = batch["patches"].astype(B.dtype_of(cfg)) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    s = x.shape[1]
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions3")
+        if positions is None:
+            pos1 = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+            positions = jnp.stack([pos1] * 3, axis=-1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+    if cfg.pos == "abs":
+        x = x + _sincos(s, cfg.d_model).astype(x.dtype)
+    return x, positions
+
+
+def _sincos(s, d):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1)[None])
+
+
+def forward(cfg: ModelCfg, params, batch, *, act_specs=None, remat=True,
+            unroll=False):
+    """Full-sequence forward.  Returns (logits, aux)."""
+    x, positions = embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, w = xs
+        x, a = _block(cfg, lp, x, positions, w, act_specs)
+        return (x, aux + a), None
+
+    step = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0)),
+                               (params["layers"], windows),
+                               unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head + B.vocab_mask(cfg, x.dtype)
+    logits = B.shard_act(logits, act_specs and act_specs.get("logits"))
+    return logits, aux / cfg.n_layers
+
+
+# --------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelCfg, batch, max_len, dtype=None):
+    dt = dtype or B.dtype_of(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(cfg: ModelCfg, params, batch, *, act_specs=None, unroll=False):
+    """Forward over the prompt, emitting per-layer K/V caches + last logits."""
+    x, positions = embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        lp, w = xs
+        h = B.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = B._qkv(cfg, lp["attn"], h, positions)
+        attn = B.attend(q, k, v, w, cfg)
+        attn = attn.reshape(x.shape[0], s, -1) @ lp["attn"]["wo"]
+        if cfg.parallel_block:
+            x = x + attn + B.apply_mlp(cfg, lp["mlp"], h)
+        else:
+            x = x + attn
+            h2 = B.apply_norm(cfg, lp["ln2"], x)
+            y = apply_moe(cfg, lp["moe"], h2, act_specs=act_specs)[0] \
+                if cfg.moe is not None else B.apply_mlp(cfg, lp["mlp"], h2)
+            x = x + y
+        x = B.shard_act(x, act_specs and act_specs.get("resid"))
+        return x, (k, v)
+
+    x, (ck, cv) = jax.lax.scan(jax.checkpoint(body), x,
+                               (params["layers"], windows),
+                               unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x[:, -1:] @ head + B.vocab_mask(cfg, x.dtype)
+    return logits, {"k": ck, "v": cv}
+
+
+def decode_step(cfg: ModelCfg, params, token, cache, cache_len, *,
+                act_specs=None, positions3=None, unroll=False):
+    """One-token decode. token: (B, 1) int32. Returns (logits, new_cache)."""
+    x = params["embed"][token].astype(B.dtype_of(cfg))
+    if cfg.mrope_sections is not None:
+        if positions3 is None:
+            p1 = jnp.full(token.shape, cache_len, jnp.int32)
+            positions = jnp.stack([p1] * 3, axis=-1)
+        else:
+            positions = positions3
+    else:
+        positions = jnp.full(token.shape, cache_len, jnp.int32)
+    if cfg.pos == "abs":
+        d = cfg.d_model
+        i = jnp.arange(d // 2)
+        ang = cache_len / (10000 ** (2 * i / d))
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+    windows = jnp.asarray(layer_windows(cfg))
+    quant = "k_scale" in cache
+
+    def body(x, xs):
+        if quant:
+            lp, w, ck, cv, ks, vs = xs
+        else:
+            lp, w, ck, cv = xs
+        h = B.apply_norm(cfg, lp["ln1"], x)
+        win = jnp.where(w > 0, w, ck.shape[1] + 1)
+        if quant:
+            out, ck, cv, ks, vs = B.decode_attention_quant(
+                cfg, lp["attn"], h, positions, ck, cv, ks, vs, cache_len,
+                window=win)
+        else:
+            out, ck, cv = B.decode_attention(cfg, lp["attn"], h, positions,
+                                             ck, cv, cache_len, window=win)
+        if cfg.parallel_block:
+            x = x + out + B.apply_mlp(cfg, lp["mlp"], h)
+        else:
+            x = x + out
+            h2 = B.apply_norm(cfg, lp["ln2"], x)
+            y = apply_moe(cfg, lp["moe"], h2, act_specs=act_specs)[0] \
+                if cfg.moe is not None else B.apply_mlp(cfg, lp["mlp"], h2)
+            x = x + y
+        x = B.shard_act(x, act_specs and act_specs.get("resid"))
+        return x, ((ck, cv, ks, vs) if quant else (ck, cv))
+
+    if quant:
+        xs_in = (params["layers"], windows, cache["k"], cache["v"],
+                 cache["k_scale"], cache["v_scale"])
+    else:
+        xs_in = (params["layers"], windows, cache["k"], cache["v"])
+    x, ys = jax.lax.scan(body, x, xs_in,
+                         unroll=cfg.n_layers if unroll else 1)
+    x = B.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head + B.vocab_mask(cfg, x.dtype)
+    logits = B.shard_act(logits, act_specs and act_specs.get("logits"))
+    if quant:
+        ck, cv, ks, vs = ys
+        return logits, {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
+    ck, cv = ys
+    return logits, {"k": ck, "v": cv}

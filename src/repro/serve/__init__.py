@@ -1,0 +1,4 @@
+from .sampler import sample
+from .engine import generate
+
+__all__ = ["sample", "generate"]

@@ -1,0 +1,36 @@
+"""Sampling head built on the paper's selection engine.
+
+Top-k runs through :func:`repro.kernels.radix_topk.radix_topk` (bit-plane
+descent over vocab-size rows — the batched column-skipping min-search dual);
+top-p is then applied *within* the k candidates (standard practice: k bounds
+the tail so the nucleus cumsum is O(k log k), not O(V log V)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.radix_topk import radix_topk
+
+
+def sample(logits, key, *, temperature=1.0, top_k=64, top_p=1.0):
+    """logits: (B, V) -> token ids (B,) int32."""
+    b, v = logits.shape
+    lg = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    k = min(top_k, v)
+    vals, idx = radix_topk(lg, k)                     # descending
+    lp = jax.nn.log_softmax(vals, axis=-1)
+    if top_p < 1.0:
+        probs = jnp.exp(lp)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with mass >= top_p (always keep argmax)
+        keep = (cum - probs) < top_p
+        lp = jnp.where(keep, lp, -jnp.inf)
+    choice = jax.random.categorical(key, lp, axis=-1)          # (B,)
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+
+
+def greedy(logits):
+    vals, idx = radix_topk(logits.astype(jnp.float32), 1)
+    return idx[:, 0]

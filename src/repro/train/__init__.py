@@ -1,0 +1,5 @@
+from .optimizer import adamw_init, adamw_update, cosine_lr
+from .loop import make_train_step, TrainState
+
+__all__ = ["adamw_init", "adamw_update", "cosine_lr", "make_train_step",
+           "TrainState"]

@@ -1,0 +1,66 @@
+"""Training step factory (pjit-ready, donated state, remat inside models)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import api
+from .optimizer import adamw_init, adamw_update, cosine_lr
+
+TrainState = Dict[str, Any]   # {"params": pytree, "opt": {master,m,v,step}}
+
+
+def init_state(cfg: ModelCfg, key) -> TrainState:
+    params = api.init(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ModelCfg, *, act_specs=None, peak_lr=3e-4,
+                    warmup=100, total_steps=10_000, weight_decay=0.1,
+                    clip=1.0, unroll=False, microbatches=1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches`` > 1 enables gradient accumulation (a lax.scan over
+    micro-slices of the global batch): the standard way to bound per-layer
+    activation-checkpoint memory (L x B_mb x S x d) at large L.  Gradients
+    accumulate in fp32.
+    """
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return api.loss(cfg, p, batch, act_specs=act_specs, unroll=unroll)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (total, metrics), grads = grads_of(state["params"], batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                    *a.shape[1:]), batch)
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              state["params"])
+
+            def body(acc, one):
+                g_acc, l_acc = acc
+                (l, _), g = grads_of(state["params"], one)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            total = l_sum / microbatches
+            metrics = {"ce": total}
+        lr = cosine_lr(state["opt"]["step"] + 1, peak=peak_lr, warmup=warmup,
+                       total=total_steps)
+        params, opt, gnorm = adamw_update(
+            grads, state["opt"], lr=lr, weight_decay=weight_decay, clip=clip)
+        out_metrics = {"loss": total, "lr": lr, "grad_norm": gnorm, **metrics}
+        return {"params": params, "opt": opt}, out_metrics
+
+    return train_step

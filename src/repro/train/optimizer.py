@@ -1,0 +1,65 @@
+"""Mixed-precision AdamW (fp32 master + moments, bf16 compute params).
+
+Pure-JAX (no optax dependency): the update is a tree_map over leaves, so it
+shards trivially under pjit — every moment/master leaf inherits the param's
+PartitionSpec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_lr(step, *, peak, warmup, total, floor=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_init(params):
+    # copy=True: master must never alias params (donation-safety for fp32)
+    f32 = lambda x: jnp.array(x, jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip=1.0, compute_dtype=None):
+    """Returns (new_params_compute_dtype, new_opt)."""
+    step = opt["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], g32)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], g32)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(master, m_, v_):
+        update = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps) + weight_decay * master
+        return master - lr * update
+
+    master = jax.tree.map(upd, opt["master"], m, v)
+
+    def cast(x, ref):
+        dt = ref.dtype if compute_dtype is None else compute_dtype
+        if x.dtype == dt:
+            # explicit copy so params never alias master — donating a state
+            # holding the same buffer twice is an XLA error (fp32 configs)
+            return jnp.copy(x)
+        return x.astype(dt)
+
+    params = jax.tree.map(cast, master, grads)
+    return params, {"master": master, "m": m, "v": v, "step": step}, gnorm

@@ -1,0 +1,102 @@
+"""Hardware-model correctness + cycle accounting (paper §II/III)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    baseline_sort,
+    colskip_sort,
+    make_dataset,
+    multibank_colskip_sort,
+)
+
+DATASETS = ["uniform", "normal", "clustered", "kruskal", "mapreduce"]
+
+
+def test_fig1_baseline_worked_example():
+    """Paper Fig. 1: sorting {8,9,10} at w=4 costs exactly N*w = 12 CRs."""
+    r = baseline_sort(np.array([8, 9, 10], dtype=np.uint64), w=4)
+    assert r.column_reads == 12
+    assert r.values.tolist() == [8, 9, 10]
+
+
+def test_fig3_colskip_worked_example():
+    """Paper Fig. 3: k=2 reduces {8,9,10} to 7 CRs (skip 3 then 2)."""
+    r = colskip_sort(np.array([8, 9, 10], dtype=np.uint64), w=4, k=2)
+    assert r.column_reads == 7
+    assert r.cycles == 7
+    assert r.values.tolist() == [8, 9, 10]
+
+
+@pytest.mark.parametrize("dataset", DATASETS)
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_colskip_sorts_correctly(dataset, k):
+    v = make_dataset(dataset, 256, 32, seed=11)
+    r = colskip_sort(v, 32, k)
+    assert np.array_equal(r.values, np.sort(v))
+    assert np.array_equal(np.sort(r.order), np.arange(256))  # permutation
+    assert r.cycles <= 256 * 32  # never worse than baseline latency
+
+
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_colskip_beats_baseline_cycles(dataset):
+    v = make_dataset(dataset, 512, 32, seed=7)
+    b = baseline_sort(v, 32)
+    c = colskip_sort(v, 32, 2)
+    assert b.column_reads == 512 * 32
+    assert c.cycles < b.cycles
+
+
+@pytest.mark.parametrize("banks", [2, 4, 16])
+@pytest.mark.parametrize("dataset", ["uniform", "mapreduce"])
+def test_multibank_identical_to_monolithic(banks, dataset):
+    """Paper §V.C: multi-bank management does not change the cycle count."""
+    v = make_dataset(dataset, 256, 32, seed=3)
+    mono = colskip_sort(v, 32, 2)
+    mb = multibank_colskip_sort(v, 32, 2, banks=banks)
+    assert np.array_equal(mb.values, mono.values)
+    assert np.array_equal(mb.order, mono.order)
+    assert mb.column_reads == mono.column_reads
+    assert mb.cycles == mono.cycles
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.lists(st.integers(0, 2**16 - 1), min_size=1, max_size=64),
+    k=st.integers(0, 4),
+    w=st.sampled_from([16, 20, 32]),
+)
+def test_property_colskip_sorts_any_input(data, k, w):
+    v = np.asarray(data, dtype=np.uint64)
+    r = colskip_sort(v, w, k)
+    assert np.array_equal(r.values, np.sort(v))
+    assert np.array_equal(np.sort(r.order), np.arange(len(v)))
+    # latency invariants: never exceeds baseline CRs; drains bounded by N
+    assert r.column_reads <= len(v) * w
+    assert 0 <= r.drains < len(v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(st.integers(0, 255), min_size=4, max_size=48),
+    banks=st.sampled_from([2, 4]),
+)
+def test_property_multibank_equivalence(data, banks):
+    n = len(data) - len(data) % banks
+    if n == 0:
+        return
+    v = np.asarray(data[:n], dtype=np.uint64)
+    mono = colskip_sort(v, 16, 2)
+    mb = multibank_colskip_sort(v, 16, 2, banks=banks)
+    assert mb.cycles == mono.cycles
+    assert np.array_equal(mb.values, mono.values)
+
+
+def test_duplicates_drain_one_per_cycle():
+    """All-equal array: 1 fresh traversal (w CRs, nothing mixed), N-1 drains."""
+    v = np.full(32, 7, dtype=np.uint64)
+    r = colskip_sort(v, 8, 2)
+    assert r.column_reads == 8
+    assert r.drains == 31
+    assert r.cycles == 8 + 31

@@ -1,0 +1,60 @@
+"""Cost model anchors (paper Fig. 8a) and scaling behaviour."""
+
+import pytest
+
+from repro.core import baseline_cost, colskip_cost, fmax_mhz, merge_cost
+
+PAPER_K2_CYC = 7.84
+
+
+def test_baseline_anchor():
+    c = baseline_cost()
+    assert abs(c.area_kum2 - 77.8) / 77.8 < 0.01
+    assert abs(c.power_mw - 319.7) / 319.7 < 0.01
+    assert c.cycles_per_number == 32
+    assert abs(c.area_eff - 0.20) < 0.01
+    assert abs(c.energy_eff - 48.9) < 0.5
+
+
+def test_colskip_anchor_single_bank():
+    c = colskip_cost(PAPER_K2_CYC, k=2, banks=1)
+    assert abs(c.area_kum2 - 101.1) / 101.1 < 0.01
+    assert abs(c.power_mw - 385.2) / 385.2 < 0.01
+    assert abs(c.area_eff - 0.63) < 0.02
+    assert abs(c.energy_eff - 165.6) < 2.0
+
+
+def test_colskip_anchor_multibank_ns64():
+    c = colskip_cost(PAPER_K2_CYC, k=2, banks=16)
+    assert abs(c.area_kum2 - 86.9) / 86.9 < 0.01
+    assert abs(c.power_mw - 349.3) / 349.3 < 0.01
+    # paper headline: -14% area, -9% power vs single-bank col-skip
+    c1 = colskip_cost(PAPER_K2_CYC, k=2, banks=1)
+    assert abs((1 - c.area_kum2 / c1.area_kum2) - 0.14) < 0.02
+    assert abs((1 - c.power_mw / c1.power_mw) - 0.09) < 0.02
+
+
+def test_merge_anchor():
+    c = merge_cost()
+    assert c.area_kum2 == 246.1 and c.power_mw == 825.9
+    b = baseline_cost()
+    assert abs(c.energy_eff / b.energy_eff - 1.24) < 0.02  # paper §V.B
+
+
+@pytest.mark.parametrize("k_lo,k_hi", [(1, 2), (2, 3), (3, 4)])
+def test_area_monotone_in_k(k_lo, k_hi):
+    assert colskip_cost(8.0, k=k_lo).area_kum2 < colskip_cost(8.0, k=k_hi).area_kum2
+
+
+def test_area_power_decrease_with_banks():
+    prev_a, prev_p = float("inf"), float("inf")
+    for banks in [1, 2, 4, 8, 16]:
+        c = colskip_cost(8.0, k=2, banks=banks)
+        assert c.area_kum2 < prev_a and c.power_mw < prev_p
+        prev_a, prev_p = c.area_kum2, c.power_mw
+
+
+def test_fmax_degrades_beyond_16_banks():
+    assert fmax_mhz(16) == 500.0
+    assert fmax_mhz(32) < 500.0
+    assert fmax_mhz(64) < fmax_mhz(32)

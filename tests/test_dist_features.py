@@ -1,0 +1,143 @@
+"""Distributed features: grad compression, pipeline parallelism, sharding
+rules, EP MoE — run in subprocesses with multi-device CPU meshes."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.dist.sharding import param_specs
+from repro.models import api
+
+
+def _run(code: str, timeout=420):
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, cwd=".",
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+def test_ef_topk_gradient_compression():
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compress import ef_topk_psum
+
+        mesh = jax.make_mesh((4,), ("data",))
+        def f(g, e):
+            return ef_topk_psum(g, e, ratio=0.25, axis_name="data")
+        sh = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                           out_specs=(P("data"), P("data")))
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        e = jnp.zeros((64,), jnp.float32)
+        red, err = jax.jit(sh)(g, e)
+        red, err = np.asarray(red), np.asarray(err)
+        # selected support: 16 largest |g| entries, each reduced 4x (psum of
+        # identical local shards x4? no: shards are distinct slices, so the
+        # psum'd tensor equals the sparsified global gradient broadcast back)
+        k = 16
+        thresh = np.sort(np.abs(g))[-k]
+        mask = np.abs(np.asarray(g)) >= thresh
+        assert (np.abs(err[mask]) < 1e-6).all()      # selected -> no residual
+        assert np.allclose(err[~mask], np.asarray(g)[~mask], atol=1e-6)
+        # error feedback: next round re-injects the residual
+        red2, err2 = jax.jit(sh)(jnp.zeros((64,), jnp.float32), jnp.asarray(err))
+        assert (np.abs(np.asarray(err2)) <= np.abs(err) + 1e-6).all()
+        print("OK")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.pipeline import make_pipelined_fn
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        def block(w, x):
+            return jnp.tanh(x @ w)
+        rng = np.random.default_rng(0)
+        ws = jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32) * 0.5)
+        xs = jnp.asarray(rng.normal(size=(6, 3, 8)).astype(np.float32))
+        run = make_pipelined_fn(mesh, block, "stage")
+        got = np.asarray(jax.jit(run)(ws, xs))
+        want = np.asarray(xs)
+        for i in range(4):
+            want = np.tanh(want @ np.asarray(ws[i]))
+        assert np.allclose(got, want, atol=1e-5), np.abs(got - want).max()
+        print("OK")
+    """)
+
+
+def test_sharded_moe_matches_auto():
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.moe import apply_moe, moe_params
+        from repro.dist import sharding as shd
+        cfg0 = get_config("qwen3-moe-235b-a22b", smoke=True)
+        cfg = dataclasses.replace(
+            cfg0, moe=dataclasses.replace(cfg0.moe, capacity_factor=8.0))
+        params = moe_params(cfg, jax.random.key(0))
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(4, 32, cfg.d_model)).astype(np.float32))
+        y_auto, _ = jax.jit(lambda p, x: apply_moe(cfg, p, x))(params, x)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        aspecs = shd.act_specs(mesh)
+        with mesh:
+            y_sh, _ = jax.jit(
+                lambda p, x: apply_moe(cfg, p, x, act_specs=aspecs))(params, x)
+        assert float(jnp.abs(y_auto - y_sh).max()) < 1e-4
+        print("OK")
+    """)
+
+
+def test_param_sharding_rules_cover_all_archs():
+    """Every arch's param tree gets valid, divisible specs on the 16x16 mesh."""
+    sizes = {"model": 16, "data": 16}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda c=cfg: api.init(c, jax.random.key(0)))
+        specs = param_specs(shapes, axis_sizes=sizes)
+        n_sharded = 0
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(shapes)[0],
+                jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+            for dim, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = int(np.prod([sizes[a] for a in axes]))
+                assert leaf.shape[dim] % n == 0, (arch, path, spec, leaf.shape)
+                n_sharded += 1
+        assert n_sharded > 0, f"{arch}: nothing sharded"
+
+
+def test_big_weights_are_never_replicated():
+    """FSDP invariant: any leaf > 32MB must be sharded on some axis."""
+    sizes = {"model": 16, "data": 16}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda c=cfg: api.init(c, jax.random.key(0)))
+        specs = param_specs(shapes, axis_sizes=sizes)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(shapes)[0], flat_s):
+            nbytes = int(np.prod(leaf.shape)) * 2
+            if nbytes > 32 * 2**20:
+                assert any(e is not None for e in spec), (arch, path, leaf.shape)

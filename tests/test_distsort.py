@@ -1,0 +1,44 @@
+"""Distributed multi-bank selection (shard_map + psum) vs monolithic.
+
+Runs in a subprocess so we can set XLA_FLAGS for 8 host devices without
+perturbing the rest of the test session (which must see 1 device).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+
+def test_sharded_topk_matches_monolithic():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.distsort import topk_mask_sharded, global_min_sharded
+        from repro.core.topk import topk_mask, to_sortable_uint
+
+        mesh = jax.make_mesh((8,), ("banks",))
+        f = jax.shard_map(lambda xl: topk_mask_sharded(xl, 13, "banks"),
+                          mesh=mesh, in_specs=P(None, "banks"),
+                          out_specs=P(None, "banks"))
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+        assert np.array_equal(np.asarray(jax.jit(f)(x)), np.asarray(topk_mask(x, 13)))
+        # heavy ties
+        x = jnp.asarray(np.repeat(rng.normal(size=(2, 64)).astype(np.float32), 8, -1))
+        m = np.asarray(jax.jit(f)(x))
+        assert (m.sum(-1) == 13).all()
+        assert np.array_equal(m, np.asarray(topk_mask(x, 13)))
+        # global min == paper's multi-bank min search
+        g = jax.shard_map(lambda ul: global_min_sharded(ul, "banks"),
+                          mesh=mesh, in_specs=P(None, "banks"), out_specs=P(None))
+        u = to_sortable_uint(x)
+        assert np.array_equal(np.asarray(jax.jit(g)(u)), np.asarray(u.min(-1)))
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

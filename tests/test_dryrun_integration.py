@@ -1,0 +1,35 @@
+"""Dry-run integration: one full cell (lower+compile on the 512-device mesh)
+runs end-to-end in a subprocess and produces a coherent JSON record."""
+
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_cell_whisper_decode(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-tiny",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, cwd=".", timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.load(open(tmp_path / "whisper-tiny_decode_32k_single.json"))
+    assert rec["status"] == "ok"
+    rl = rec["roofline"]
+    assert rl["flops"] > 0 and rl["hbm_bytes"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["mem"]["args_gb"] > 0
+
+
+def test_dryrun_skip_cell_records_reason(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen1.5-32b",
+         "--shape", "long_500k", "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, cwd=".", timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "qwen1.5-32b_long_500k_single.json"))
+    assert rec["status"] == "skip"
+    assert "full-attention" in rec["reason"]

@@ -1,0 +1,79 @@
+"""JAX engines (jaxsort / topk) vs the numpy hardware model & lax oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import colskip_sort, colskip_sort_jax, make_dataset, topk, topk_mask
+from repro.core.topk import from_sortable_uint, to_sortable_uint
+
+
+@pytest.mark.parametrize("dataset", ["uniform", "mapreduce", "clustered"])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_jaxsort_matches_hardware_model_exactly(dataset, k):
+    v = make_dataset(dataset, 128, 32, seed=5)
+    r = colskip_sort(v, 32, k)
+    sv, order, crs, cyc = colskip_sort_jax(jnp.asarray(v.astype(np.uint32)), 32, k)
+    assert np.array_equal(np.asarray(sv), r.values.astype(np.uint32))
+    assert np.array_equal(np.asarray(order), r.order)
+    assert int(crs) == r.column_reads
+    assert int(cyc) == r.cycles
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.lists(st.integers(0, 2**20 - 1), min_size=2, max_size=40),
+       k=st.integers(1, 3))
+def test_property_jaxsort_equals_numpy(data, k):
+    v = np.asarray(data, dtype=np.uint64)
+    r = colskip_sort(v, 24, k)
+    sv, _, crs, cyc = colskip_sort_jax(jnp.asarray(v.astype(np.uint32)), 24, k)
+    assert np.array_equal(np.asarray(sv), r.values.astype(np.uint32))
+    assert (int(crs), int(cyc)) == (r.column_reads, r.cycles)
+
+
+def test_sortable_uint_roundtrip_and_order():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32) * 1e3)
+    u = to_sortable_uint(x)
+    assert np.array_equal(np.asarray(from_sortable_uint(u, jnp.float32)), np.asarray(x))
+    # order preservation
+    xs = np.asarray(x)
+    order_f = np.argsort(xs, kind="stable")
+    order_u = np.argsort(np.asarray(u), kind="stable")
+    assert np.array_equal(xs[order_f], xs[order_u])
+
+
+@pytest.mark.parametrize("shape,k", [((4, 128), 8), ((2, 3, 64), 5), ((1, 1000), 17)])
+def test_topk_matches_lax(shape, k):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    v1, i1 = topk(x, k)
+    v2, i2 = jax.lax.top_k(x, k)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_ties_match_lax():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(np.tile(rng.normal(size=(2, 16)).astype(np.float32), (1, 4)))
+    v1, i1 = topk(x, 6)
+    v2, i2 = jax.lax.top_k(x, 6)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 80), k=st.integers(1, 10), seed=st.integers(0, 2**16))
+def test_property_topk_mask_exact_k(n, k, seed):
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, n)).astype(np.float32))
+    m = np.asarray(topk_mask(x, k))
+    assert (m.sum(-1) == k).all()
+    # selected set == argpartition top-k set (values)
+    xs = np.asarray(x)
+    for r in range(3):
+        sel = np.sort(xs[r][m[r]])
+        ref = np.sort(np.partition(xs[r], n - k)[n - k:])
+        assert np.array_equal(sel, ref)

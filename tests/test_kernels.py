@@ -1,0 +1,122 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles — shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import colskip_sort
+from repro.kernels.colskip import colskip_sort_batched
+from repro.kernels.colskip.ref import sort_ref
+from repro.kernels.radix_topk import radix_topk, radix_topk_threshold
+from repro.kernels.radix_topk.ref import threshold_ref
+
+
+@pytest.mark.parametrize("b,n,k", [(4, 128, 8), (7, 256, 1), (16, 1024, 32),
+                                   (3, 640, 5), (1, 128, 128)])
+def test_radix_topk_threshold_kernel_vs_ref(b, n, k):
+    rng = np.random.default_rng(b * 1000 + n + k)
+    x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32) * 10)
+    t1 = radix_topk_threshold(x, k, use_pallas=True, interpret=True)
+    t2 = threshold_ref(x, k)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,k", [(4, 128, 8), (2, 512, 16)])
+def test_radix_topk_dtypes(b, n, k, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n))).astype(dtype)
+    v1, i1 = radix_topk(x, k, use_pallas=True, interpret=True)
+    v2, i2 = jax.lax.top_k(x.astype(jnp.float32), k)
+    assert np.array_equal(np.asarray(v1.astype(jnp.float32)), np.asarray(v2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_radix_topk_wide_rows_multibank_path():
+    """Vocab-scale rows exercise the two-level (bank + manager) reduction."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 50000)).astype(np.float32))
+    v1, i1 = radix_topk(x, 17, use_pallas=False, bank_width=8192)
+    v2, i2 = jax.lax.top_k(x, 17)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_radix_topk_constant_rows():
+    x = jnp.full((3, 256), -2.5, jnp.float32)
+    v1, i1 = radix_topk(x, 4, use_pallas=True, interpret=True)
+    v2, i2 = jax.lax.top_k(x, 4)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_radix_topk_plane_skip_telemetry():
+    """Small-dynamic-range inputs must visit far fewer than 32 planes."""
+    from repro.kernels.radix_topk.kernel import threshold_pallas
+    x = jnp.asarray(np.random.default_rng(0).uniform(1.0, 2.0, (8, 256)).astype(np.float32))
+    _, visited = threshold_pallas(x, 8, interpret=True)
+    assert (np.asarray(visited) < 32).all()
+    assert (np.asarray(visited) >= 1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([128, 256]), k=st.integers(1, 16), seed=st.integers(0, 999))
+def test_property_radix_topk_equals_lax(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, n)).astype(np.float32))
+    v1, i1 = radix_topk(x, k, use_pallas=True, interpret=True)
+    v2, i2 = jax.lax.top_k(x, k)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("b,n,w,k", [(3, 64, 16, 2), (2, 128, 32, 1), (4, 32, 8, 3)])
+def test_colskip_kernel_vs_ref_and_hardware(b, n, w, k):
+    rng = np.random.default_rng(b + n + w + k)
+    x = rng.integers(0, 1 << w, size=(b, n)).astype(np.uint32)
+    xv = jnp.asarray(x)
+    v1, o1, c1, y1 = colskip_sort_batched(xv, w, k, use_pallas=True, interpret=True)
+    v2, o2, c2, y2 = sort_ref(xv, w, k)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    for r in range(b):
+        hw = colskip_sort(x[r].astype(np.uint64), w, k)
+        assert np.array_equal(np.asarray(v1[r]), hw.values.astype(np.uint32))
+        assert int(c1[r]) == hw.column_reads
+        assert int(y1[r]) == hw.cycles
+
+
+def test_colskip_kernel_batch_padding():
+    """B not a multiple of the tile: padded rows must not leak into outputs."""
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 1 << 16, size=(5, 64)).astype(np.uint32)
+    v, o, c, y = colskip_sort_batched(jnp.asarray(x), 16, 2,
+                                      use_pallas=True, interpret=True)
+    assert v.shape == (5, 64)
+    for r in range(5):
+        assert np.array_equal(np.asarray(v[r]), np.sort(x[r]))
+
+
+@pytest.mark.parametrize("b,n", [(3, 64), (5, 256), (2, 1024), (7, 128)])
+def test_bitonic_kernel_vs_ref(b, n):
+    from repro.kernels.bitonic import bitonic_sort
+    rng = np.random.default_rng(b * n)
+    x = rng.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(bitonic_sort(jnp.asarray(x), use_pallas=True,
+                                  interpret=True))
+    assert np.array_equal(got, np.sort(x, axis=-1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), logn=st.integers(3, 8))
+def test_property_bitonic_sorts(seed, logn):
+    from repro.kernels.bitonic import bitonic_sort
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**16, (2, n), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(bitonic_sort(jnp.asarray(x), use_pallas=True,
+                                  interpret=True))
+    assert np.array_equal(got, np.sort(x, axis=-1))
