@@ -1,14 +1,16 @@
 """Benchmark harness — one module per paper table/figure + kernel/roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Run:
+Prints ``name,us_per_call,derived`` CSV rows (or a JSON array with
+``--json``).  Run:
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...] [--json]
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 
 SUITES = [
@@ -18,12 +20,15 @@ SUITES = [
     "benchmarks.fig8b_multibank",
     "benchmarks.kernel_bench",
     "benchmarks.serving_bench",
+    "benchmarks.sortserve_bench",
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated suite substrings")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON array of rows instead of CSV")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
@@ -31,9 +36,11 @@ def main() -> None:
 
     def report(name: str, us_per_call: float, derived: str) -> None:
         rows.append((name, us_per_call, derived))
-        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+        if not args.json:
+            print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
-    print("name,us_per_call,derived")
+    if not args.json:
+        print("name,us_per_call,derived")
     failures = []
     for mod_name in SUITES:
         if only and not any(s in mod_name for s in only):
@@ -43,10 +50,19 @@ def main() -> None:
             mod.run(report)
         except Exception as e:  # keep the harness going; report at the end
             failures.append((mod_name, repr(e)))
-            print(f"{mod_name},0.0,ERROR {e!r}", flush=True)
+            if not args.json:
+                print(f"{mod_name},0.0,ERROR {e!r}", flush=True)
 
     n_miss = sum(1 for _, _, d in rows if "MISS" in d)
-    print(f"# {len(rows)} rows, {n_miss} band misses, {len(failures)} suite errors")
+    if args.json:
+        print(json.dumps({
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in rows],
+            "band_misses": n_miss,
+            "errors": [{"suite": s, "error": e} for s, e in failures],
+        }, indent=2))
+    else:
+        print(f"# {len(rows)} rows, {n_miss} band misses, {len(failures)} suite errors")
     if failures:
         sys.exit(1)
 

@@ -66,7 +66,8 @@ def topk_mask_sharded(x_local: jax.Array, k: int, axis_name: str) -> jax.Array:
     eq_local = eq.sum(axis=-1)
     # exclusive prefix over banks of local eq counts
     bank = jax.lax.axis_index(axis_name)
-    nbanks = jax.lax.axis_size(axis_name)
+    # psum of 1 == axis size; jax.lax.axis_size only exists on newer jax
+    nbanks = jax.lax.psum(1, axis_name)
     eq_all = jax.lax.all_gather(eq_local, axis_name)            # (C, ...)
     earlier = (jnp.arange(nbanks) < bank).reshape((nbanks,) + (1,) * eq_local.ndim)
     before = (eq_all * earlier).sum(axis=0)

@@ -26,6 +26,7 @@ __all__ = [
     "to_sortable_uint",
     "from_sortable_uint",
     "kth_largest_sortable",
+    "exact_k_mask",
     "topk_mask",
     "topk",
     "discriminating_planes",
@@ -106,15 +107,26 @@ def kth_largest_sortable(u: jax.Array, k: int) -> jax.Array:
     return prefix
 
 
+def exact_k_mask(u: jax.Array, thresh: jax.Array, k: int) -> jax.Array:
+    """Exact-k boolean mask above a per-row threshold (sortable domain).
+
+    Selects everything strictly above ``thresh`` plus the lowest-index ties
+    at it, so exactly k elements are marked per row — the tie-break contract
+    (``lax.top_k`` semantics) every engine and kernel in this repo shares.
+    ``thresh`` is broadcast against ``u`` (pass ``t[..., None]`` per row).
+    """
+    gt = u > thresh
+    eq = u == thresh
+    need_eq = k - gt.sum(axis=-1, keepdims=True)
+    eq_rank = jnp.cumsum(eq, axis=-1) - 1
+    return gt | (eq & (eq_rank < need_eq))
+
+
 def topk_mask(x: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the top-k elements (trailing axis), lax.top_k tie rules."""
     u = to_sortable_uint(x)
     t = kth_largest_sortable(u, k)[..., None]
-    gt = u > t
-    eq = u == t
-    need_eq = k - gt.sum(axis=-1, keepdims=True)
-    eq_rank = jnp.cumsum(eq, axis=-1) - 1
-    return gt | (eq & (eq_rank < need_eq))
+    return exact_k_mask(u, t, k)
 
 
 @functools.partial(jax.jit, static_argnums=(1,))

@@ -9,7 +9,12 @@ is compared against in benchmarks/kernel_bench.py.
 
 Passes are unrolled at trace time (N static, power of two): stage k doubles
 the sorted-run length, substage j exchanges lane i with lane i^j in the
-direction given by bit k of i.
+direction given by bit k of i.  The exchange is expressed as a reshape to
+``(TB, N/2j, 2, j)`` plus elementwise min/max — lane i's partner i^j is the
+other element of axis 2 — rather than a ``take_along_axis`` gather: the
+pairing is compile-time regular, reshapes are free on the VPU, and the
+gather formulation made XLA's CPU backend (used for interpret-mode tests)
+compile the unrolled network pathologically slowly (minutes per shape).
 """
 
 from __future__ import annotations
@@ -23,19 +28,22 @@ from jax.experimental import pallas as pl
 
 def _bitonic_kernel(x_ref, out_ref):
     u = x_ref[...]                                # (TB, N) uint32
-    n = u.shape[1]
-    idx = jax.lax.broadcasted_iota(jnp.int32, u.shape, 1)
+    tb, n = u.shape
     k = 2
     while k <= n:
         j = k // 2
         while j >= 1:
-            partner = jnp.bitwise_xor(idx, j)
-            pu = jnp.take_along_axis(u, partner, axis=1)
-            up = (idx & k) == 0                   # ascending region
-            lo = idx < partner
-            keep_min = jnp.where(up, lo, ~lo)
-            mn, mx = jnp.minimum(u, pu), jnp.maximum(u, pu)
-            u = jnp.where(keep_min, mn, mx)
+            # lane i = q*2j + s*j + t pairs with i^j: axis 2 below is s
+            m = n // (2 * j)
+            v = u.reshape(tb, m, 2, j)
+            a, b = v[:, :, 0, :], v[:, :, 1, :]
+            mn, mx = jnp.minimum(a, b), jnp.maximum(a, b)
+            # direction bit: k >= 2j, so i & k depends only on the block q
+            q = jax.lax.broadcasted_iota(jnp.int32, (1, m, 1), 1)
+            up = (q * (2 * j)) & k == 0           # ascending region
+            lo = jnp.where(up, mn, mx)
+            hi = jnp.where(up, mx, mn)
+            u = jnp.stack([lo, hi], axis=2).reshape(tb, n)
             j //= 2
         k *= 2
     out_ref[...] = u

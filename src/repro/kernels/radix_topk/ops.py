@@ -20,7 +20,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.topk import kth_largest_sortable, to_sortable_uint, from_sortable_uint
+from repro.core.topk import (
+    exact_k_mask,
+    from_sortable_uint,
+    kth_largest_sortable,
+    to_sortable_uint,
+)
 from . import kernel as _k
 
 
@@ -43,15 +48,10 @@ def radix_topk_threshold(x: jax.Array, k: int, *, use_pallas: bool | None = None
 def topk_mask_from_threshold(x: jax.Array, thresh: jax.Array, k: int) -> jax.Array:
     """Exact-k boolean mask from a per-row threshold; low-index tie-break."""
     u = to_sortable_uint(x.astype(jnp.float32))
-    t = thresh[..., None]
-    gt = u > t
-    eq = u == t
-    need_eq = k - gt.sum(axis=-1, keepdims=True)
-    eq_rank = jnp.cumsum(eq, axis=-1) - 1
-    return gt | (eq & (eq_rank < need_eq))
+    return exact_k_mask(u, thresh[..., None], k)
 
 
-def _compact(x, u, mask, k):
+def compact_topk(x, u, mask, k):
     """Gather the k selected entries per row, ordered (value desc, index asc)."""
     b, n = u.shape
     slot = jnp.cumsum(mask, axis=-1) - 1                      # 0..k-1 per row
@@ -86,7 +86,7 @@ def radix_topk(x: jax.Array, k: int, *, use_pallas: bool | None = None,
     if n <= bank_width:
         thresh = radix_topk_threshold(xf, k, use_pallas=use_pallas, interpret=interpret)
         mask = topk_mask_from_threshold(xf, thresh, k)
-        vals, idxs = _compact(xf, to_sortable_uint(xf.astype(jnp.float32)), mask, k)
+        vals, idxs = compact_topk(xf, to_sortable_uint(xf.astype(jnp.float32)), mask, k)
     else:
         # multi-bank: pad to C banks, per-bank top-k', manager-select pass
         c = -(-n // bank_width)
@@ -96,7 +96,7 @@ def radix_topk(x: jax.Array, k: int, *, use_pallas: bool | None = None,
         kb = min(k, bank_width)
         tb_ = radix_topk_threshold(xb, kb, use_pallas=use_pallas, interpret=interpret)
         mb = topk_mask_from_threshold(xb, tb_, kb)
-        vb, ib = _compact(xb, to_sortable_uint(xb.astype(jnp.float32)), mb, kb)
+        vb, ib = compact_topk(xb, to_sortable_uint(xb.astype(jnp.float32)), mb, kb)
         # global index of each bank candidate
         bank_of = (jnp.arange(b * c, dtype=jnp.int32) % c)[:, None]
         gidx = ib + bank_of * bank_width
@@ -107,7 +107,7 @@ def radix_topk(x: jax.Array, k: int, *, use_pallas: bool | None = None,
         # NOTE tie-break: bank candidates are (value desc, index asc) within
         # banks and banks are ordered, so low-global-index ties win, matching
         # lax.top_k.
-        vals, slots = _compact(cand_v, to_sortable_uint(cand_v.astype(jnp.float32)), mg, k)
+        vals, slots = compact_topk(cand_v, to_sortable_uint(cand_v.astype(jnp.float32)), mg, k)
         idxs = jnp.take_along_axis(cand_i, slots, axis=-1)
 
     return (vals.reshape(orig_shape[:-1] + (k,)),

@@ -1,0 +1,44 @@
+"""sortserve — sort-as-a-service over the column-skipping engines.
+
+The paper's §IV multi-bank manager turns one physical sorter into a pool of
+synchronized sub-sorters; this package applies the same structure one level
+up, turning the repo's sorting engines into a request-level service:
+
+  * :mod:`request`   — typed request/response API (sort / argsort / topk /
+    kmin over uint/int/float payloads of heterogeneous lengths),
+  * :mod:`batcher`   — pow-2 shape bucketing with sentinel padding in the
+    order-preserving sortable-uint32 domain, coalescing requests into fixed
+    ``(B, N)`` tiles so jit caches stay warm,
+  * :mod:`scheduler` — bank-pool scheduler modeled on the §IV manager:
+    per-bank occupancy, OR-combined readiness, drain policy for oversized
+    tiles that shard across banks,
+  * :mod:`backends`  — pluggable execution backends (colskip, radix_topk,
+    jaxsort, numpy oracle) behind a cost-model-driven selection policy,
+  * :mod:`engine`    — the synchronous serving core, an async wrapper, and
+    JSON telemetry (latency, column reads / cycles, bucket hit rates).
+"""
+
+from .backends import BACKENDS, CostPolicy, resolve_backends, solve_numpy
+from .batcher import Batcher, Tile, pow2_bucket
+from .engine import AsyncSortServe, EngineConfig, SortServeEngine
+from .request import OP_KINDS, SortRequest, SortResponse, encode_payload
+from .scheduler import BankPool, Scheduler
+
+__all__ = [
+    "AsyncSortServe",
+    "BACKENDS",
+    "BankPool",
+    "Batcher",
+    "CostPolicy",
+    "EngineConfig",
+    "OP_KINDS",
+    "Scheduler",
+    "SortRequest",
+    "SortResponse",
+    "SortServeEngine",
+    "Tile",
+    "encode_payload",
+    "pow2_bucket",
+    "resolve_backends",
+    "solve_numpy",
+]

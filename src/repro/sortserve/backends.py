@@ -1,0 +1,306 @@
+"""Pluggable execution backends + cost-model-driven selection policy.
+
+A backend executes one :class:`~repro.sortserve.batcher.Tile` — a ``(B, N)``
+uint32 array in the sortable domain — and returns values/indices plus
+whatever hardware telemetry it can model:
+
+  ============  ======================  ===================================
+  backend       ops                     telemetry
+  ============  ======================  ===================================
+  ``colskip``   sort, argsort, kmin     exact per-row CRs + cycles from the
+                                        §III state-recording hardware model
+                                        (:func:`colskip_sort_batched`)
+  ``radix_topk`` topk, kmin             per-row discriminating-plane reads —
+                                        the SIMD dual of column skipping
+                                        (:mod:`repro.kernels.radix_topk`;
+                                        jnp engine off-TPU, same algorithm)
+  ``jaxsort``   sort, argsort, kmin     none (XLA comparison sort; serves
+                                        widths beyond the simulation cap)
+  ``numpy``     all                     none (reference oracle)
+  ============  ======================  ===================================
+
+Selection is done by :class:`CostPolicy` using the §V cost model
+(:mod:`repro.core.costmodel`): column-skipping needs roughly
+``w / 4.08 ≈ 7.84`` CR cycles per number (the paper's k=2 anchor), while a
+radix top-k descent reads at most ``w`` bit planes *total* per row plus one
+compaction pass per selected element — so selection ops route to
+``radix_topk`` whenever ``w + k < n * w / 4.08``, i.e. essentially always
+for ``n > 8``.  For full sorts the hardware model always prefers colskip;
+in software the cycle-exact simulator costs O(N·w) per *output* element, so
+rows wider than ``sim_width_cap`` are served by ``jaxsort`` instead (their
+hardware cycles are then *estimated* from the cost model, not simulated).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import costmodel
+
+from .batcher import Tile
+
+__all__ = [
+    "BACKENDS",
+    "Backend",
+    "CostPolicy",
+    "TileResult",
+    "estimate_colskip_cycles",
+    "register_backend",
+    "resolve_backends",
+    "solve_numpy",
+]
+
+# Paper Fig. 6/8a anchor: k=2 column skipping reaches 4.08x over the
+# baseline's w cycles/number on MapReduce-like data.
+_COLSKIP_SPEEDUP_ANCHOR = 4.08
+
+
+def estimate_colskip_cycles(n: int, w: int = 32) -> float:
+    """A-priori CR-cycle estimate for column-skip sorting ``n`` numbers."""
+    return n * w / _COLSKIP_SPEEDUP_ANCHOR
+
+
+@dataclass
+class TileResult:
+    """Backend output for one tile (all arrays row-aligned with the tile)."""
+
+    values: np.ndarray                  # (B, out) uint32, sortable domain
+    indices: np.ndarray | None          # (B, out) int32 positions, or None
+    column_reads: np.ndarray | None     # (B,) per-row CR/plane-read counts
+    cycles: np.ndarray | None           # (B,) per-row HW cycles (exact only)
+    backend: str
+    estimated_cycles: float | None = None   # cost-model estimate when not exact
+    meta: dict = field(default_factory=dict)
+
+
+def solve_numpy(op: str, u: np.ndarray, k: int | None) -> tuple[np.ndarray, np.ndarray]:
+    """Reference answer for one encoded row: (values_u32, indices).
+
+    Shared by the numpy backend, the engine's verify mode, and the CLI/test
+    oracles, so "bit-identical to the numpy oracle" is a single definition.
+    """
+    u = np.asarray(u, dtype=np.uint32)
+    if op in ("sort", "argsort"):
+        idx = np.argsort(u, kind="stable").astype(np.int32)
+        return u[idx], idx
+    if op == "kmin":
+        idx = np.argsort(u, kind="stable")[:k].astype(np.int32)
+        return u[idx], idx
+    if op == "topk":
+        # descending value, ascending-index ties: stable sort on bitwise-not
+        idx = np.argsort(~u, kind="stable")[:k].astype(np.int32)
+        return u[idx], idx
+    raise ValueError(f"unknown op {op!r}")
+
+
+class Backend:
+    """Base class: subclasses set ``name``/``ops`` and implement ``run``."""
+
+    name: str = "?"
+    ops: frozenset = frozenset()
+
+    def run(self, tile: Tile) -> TileResult:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name} ops={sorted(self.ops)}>"
+
+
+BACKENDS: dict[str, type[Backend]] = {}
+
+
+def register_backend(cls: type[Backend]) -> type[Backend]:
+    BACKENDS[cls.name] = cls
+    return cls
+
+
+def resolve_backends(names, **kwargs) -> list[Backend]:
+    """Instantiate backends by name; unknown names raise with the menu."""
+    out = []
+    for name in names:
+        if name not in BACKENDS:
+            raise KeyError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
+        out.append(BACKENDS[name](**kwargs.get(name, {})))
+    return out
+
+
+@register_backend
+class NumpyBackend(Backend):
+    """Pure-numpy oracle; supports every op, models no hardware."""
+
+    name = "numpy"
+    ops = frozenset(("sort", "argsort", "topk", "kmin"))
+
+    def run(self, tile: Tile) -> TileResult:
+        b, _ = tile.data.shape
+        out = tile.k if tile.op in ("topk", "kmin") else tile.data.shape[1]
+        vals = np.empty((b, out), np.uint32)
+        idxs = np.empty((b, out), np.int32)
+        for r in range(b):
+            vals[r], idxs[r] = solve_numpy(tile.op, tile.data[r], tile.k)
+        return TileResult(vals, idxs, None, None, self.name)
+
+
+@register_backend
+class ColskipBackend(Backend):
+    """Cycle-exact column-skipping sorter (§III hardware model, batched).
+
+    ``kmin`` runs the full sort and slices the first k outputs; the
+    simulated CR/cycle telemetry is therefore that of a *complete* sort (a
+    k-early-exit drain is a known follow-up, tracked in ROADMAP.md).
+    """
+
+    name = "colskip"
+    ops = frozenset(("sort", "argsort", "kmin"))
+
+    def __init__(self, w: int = 32, state_k: int = 2, use_pallas: bool | None = None):
+        self.w = w
+        self.state_k = state_k
+        self.use_pallas = use_pallas
+
+    def run(self, tile: Tile) -> TileResult:
+        from repro.kernels.colskip import colskip_sort_batched
+        vals, order, crs, cycles = colskip_sort_batched(
+            tile.data, self.w, self.state_k, use_pallas=self.use_pallas)
+        vals = np.asarray(vals)
+        order = np.asarray(order, dtype=np.int32)
+        if tile.op == "kmin":
+            vals, order = vals[:, :tile.k], order[:, :tile.k]
+        return TileResult(vals, order,
+                          np.asarray(crs, np.int64), np.asarray(cycles, np.int64),
+                          self.name, meta={"w": self.w, "state_k": self.state_k})
+
+
+@register_backend
+class RadixTopkBackend(Backend):
+    """Bit-plane radix selection in the sortable-uint32 domain.
+
+    Off-TPU this uses the pure-jnp engine (:mod:`repro.core.topk`) that is
+    also the Pallas kernel's oracle — identical algorithm, so the
+    discriminating-plane telemetry (the SIMD analogue of the paper's
+    skippable uniform columns) is representative either way.  ``kmin`` is
+    served as top-k on the bitwise complement (order reversal in uint32),
+    which preserves the ascending-index tie-break exactly.
+    """
+
+    name = "radix_topk"
+    ops = frozenset(("topk", "kmin"))
+
+    def run(self, tile: Tile) -> TileResult:
+        import jax.numpy as jnp
+
+        vals, idxs, reads = _get_radix_select()(
+            jnp.asarray(tile.data), tile.k, tile.op == "kmin")
+        reads = np.asarray(reads, np.int64)
+        return TileResult(np.asarray(vals), np.asarray(idxs, np.int32),
+                          reads, None, self.name,
+                          meta={"planes_max": int(reads.max(initial=0))})
+
+
+@register_backend
+class JaxSortBackend(Backend):
+    """XLA comparison sort — the wide-row fallback past the simulation cap."""
+
+    name = "jaxsort"
+    ops = frozenset(("sort", "argsort", "kmin"))
+
+    def run(self, tile: Tile) -> TileResult:
+        import jax.numpy as jnp
+
+        order = np.asarray(jnp.argsort(jnp.asarray(tile.data), axis=-1,
+                                       stable=True), dtype=np.int32)
+        vals = np.take_along_axis(tile.data, order, axis=-1)
+        if tile.op == "kmin":
+            vals, order = vals[:, :tile.k], order[:, :tile.k]
+        est = estimate_colskip_cycles(tile.data.shape[1]) * tile.data.shape[0]
+        return TileResult(vals, order, None, None, self.name,
+                          estimated_cycles=est)
+
+
+def _radix_select(u, k: int, kmin: bool):
+    """Jitted tile body: (B, N) sortable-uint -> (values, indices, plane reads).
+
+    ``kmin`` selects the k smallest by descending on the bitwise complement
+    (an order reversal in uint32), then complements the values back.
+    """
+    from repro.core.topk import (
+        discriminating_planes,
+        exact_k_mask,
+        kth_largest_sortable,
+    )
+    from repro.kernels.radix_topk.ops import compact_topk
+
+    d = ~u if kmin else u
+    thresh = kth_largest_sortable(d, k)[..., None]
+    mask = exact_k_mask(d, thresh, k)
+    vals, idxs = compact_topk(d, d, mask, k)
+    if kmin:
+        vals = ~vals
+    # one CR per discriminating plane per row; uniform planes are skipped
+    reads = discriminating_planes(u).sum(axis=-1)
+    return vals, idxs, reads
+
+
+_radix_select_cache = None
+
+
+def _get_radix_select():  # lazy: keep jax tracing off the module-load path
+    global _radix_select_cache
+    if _radix_select_cache is None:
+        import jax
+        _radix_select_cache = jax.jit(_radix_select, static_argnums=(1, 2))
+    return _radix_select_cache
+
+
+class CostPolicy:
+    """Route each tile to the cheapest capable backend (see module docstring).
+
+    The decision compares modeled hardware cost (CR cycles from
+    :mod:`repro.core.costmodel` anchors) and applies a software guard: the
+    cycle-exact simulator is only used up to ``sim_width_cap`` columns.
+    """
+
+    def __init__(self, backends, sim_width_cap: int = 2048, w: int = 32):
+        self.backends = list(backends)
+        self.by_name = {b.name: b for b in self.backends}
+        self.sim_width_cap = sim_width_cap
+        self.w = w
+
+    def modeled_throughput(self, n: int, state_k: int = 2,
+                           banks: int = 1) -> float:
+        """Numbers/s the modeled hardware would sustain on this width."""
+        cpn = estimate_colskip_cycles(n, self.w) / n
+        return costmodel.colskip_cost(cpn, n=n, w=self.w, k=state_k,
+                                      banks=banks).throughput_num_per_s
+
+    def choose(self, tile: Tile) -> Backend:
+        if tile.hint is not None:       # hints are uniform per tile (bucket key)
+            if tile.hint not in self.by_name:
+                raise KeyError(f"hinted backend {tile.hint!r} not enabled")
+            be = self.by_name[tile.hint]
+            if tile.op not in be.ops:
+                raise ValueError(f"backend {tile.hint!r} cannot serve {tile.op!r}")
+            return be
+        cands = [b for b in self.backends if tile.op in b.ops]
+        if not cands:
+            raise ValueError(f"no enabled backend serves op {tile.op!r}")
+        n = tile.data.shape[1]
+        if tile.op in ("topk", "kmin"):
+            # radix descent: <= w plane reads + k compaction passes per row,
+            # vs colskip's ~ n*w/4.08 CR cycles for the full min-search sort.
+            radix_cost = self.w + (tile.k or 0)
+            if radix_cost < estimate_colskip_cycles(n, self.w):
+                for b in cands:
+                    if b.name == "radix_topk":
+                        return b
+        by_name = {b.name: b for b in cands}
+        if "colskip" in by_name and n <= self.sim_width_cap:
+            return by_name["colskip"]     # cycle-exact simulation, affordable
+        # past the cap: any non-simulating backend before the O(N*w)-per-
+        # output simulator, which is only a last resort
+        for name in ("jaxsort", "numpy"):
+            if name in by_name:
+                return by_name[name]
+        return cands[0]

@@ -1,0 +1,355 @@
+"""The serving loop: synchronous core, async wrapper, JSON telemetry.
+
+``SortServeEngine.submit`` is the whole data path:
+
+    requests --encode--> Batcher --(B,N) tiles--> Scheduler(bank pool)
+             --CostPolicy--> backend.run --> scatter rows --> responses
+
+Everything is deterministic and synchronous; :class:`AsyncSortServe` adds a
+micro-batching front door (a collector thread + ``concurrent.futures``)
+for callers that submit one request at a time, the way an RPC server would.
+
+Telemetry is aggregated across ``submit`` calls and exported by
+:meth:`SortServeEngine.telemetry` / :meth:`dump_telemetry`:
+
+  * per-request latency (mean / p50 / p95 / max),
+  * aggregate column reads and hardware cycles, split exact vs estimated,
+  * batcher stats (tiles, padding fractions, jit-signature bucket hit rate),
+  * scheduler stats (per-bank occupancy, drains, oversized waves),
+  * per-backend request/row counts,
+  * the cost model's throughput for the modeled hardware at each width.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .backends import CostPolicy, TileResult, resolve_backends, solve_numpy
+from .batcher import Batcher, Tile
+from .request import SortRequest, SortResponse, decode_values
+from .scheduler import BankPool, Scheduler
+
+__all__ = ["AsyncSortServe", "EngineConfig", "SortServeEngine"]
+
+
+@dataclass
+class EngineConfig:
+    backends: tuple = ("colskip", "radix_topk", "jaxsort", "numpy")
+    tile_rows: int = 8
+    min_bucket: int = 8
+    banks: int = 8
+    bank_width: int = 1024
+    bank_rows: int = 8
+    w: int = 32                     # bit width of the sortable domain
+    state_k: int = 2                # colskip state-recording entries
+    sim_width_cap: int = 2048       # widest row the cycle-exact sim serves
+    verify: bool = False            # cross-check every response vs the oracle
+    backend_kwargs: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.tile_rows > self.bank_rows:
+            raise ValueError(
+                f"tile_rows={self.tile_rows} exceeds bank_rows={self.bank_rows}; "
+                "tiles would never fit a bank")
+
+
+class SortServeEngine:
+    """Synchronous sort-serving core over a pool of logical banks."""
+
+    def __init__(self, config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+        kwargs = dict(self.config.backend_kwargs)
+        # w/state_k are owned by EngineConfig (the CostPolicy and telemetry
+        # are computed from them); a conflicting per-backend override would
+        # silently desync simulated cycles from the modeled hardware
+        clash = {"w", "state_k"} & set(kwargs.get("colskip", {}))
+        if clash:
+            raise ValueError(
+                f"set {sorted(clash)} via EngineConfig, not backend_kwargs['colskip']")
+        kwargs["colskip"] = {**kwargs.get("colskip", {}),
+                             "w": self.config.w, "state_k": self.config.state_k}
+        self.backends = resolve_backends(self.config.backends, **kwargs)
+        self.policy = CostPolicy(self.backends,
+                                 sim_width_cap=self.config.sim_width_cap,
+                                 w=self.config.w)
+        self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
+        self.pool = BankPool(self.config.banks, self.config.bank_width,
+                             self.config.bank_rows)
+        self.scheduler = Scheduler(self.pool)
+        # bounded window for percentiles + running totals for all-time mean,
+        # so a long-lived service does not accumulate one float per request
+        self._latencies: deque = deque(maxlen=4096)
+        self._lat_sum = 0.0
+        self._lat_count = 0
+        self._agg = {
+            "requests": 0, "column_reads": 0, "cycles_exact": 0,
+            "cycles_estimated": 0.0, "verify_failures": 0,
+            "per_backend": {}, "modeled_hw": {},
+        }
+
+    # ------------------------------------------------------------------ core
+    def submit(self, requests: list[SortRequest]) -> list[SortResponse]:
+        """Serve a batch of requests; responses align with the input order."""
+        t0 = time.perf_counter()
+        # validate at ingress — before any batching — so bad input raises
+        # with the engine untouched and no co-batched work done
+        if len({req.request_id for req in requests}) != len(requests):
+            raise ValueError("duplicate request_id in batch; responses are "
+                             "matched to requests by id")
+        for req in requests:
+            if req.backend is not None:
+                be = self.policy.by_name.get(req.backend)
+                if be is None:
+                    raise KeyError(
+                        f"request {req.request_id}: hinted backend "
+                        f"{req.backend!r} not enabled; have "
+                        f"{sorted(self.policy.by_name)}")
+                if req.op not in be.ops:
+                    raise ValueError(
+                        f"request {req.request_id}: backend {req.backend!r} "
+                        f"cannot serve op {req.op!r}")
+            elif not any(req.op in b.ops for b in self.backends):
+                raise ValueError(
+                    f"request {req.request_id}: no enabled backend serves "
+                    f"op {req.op!r}; have {sorted(self.policy.by_name)}")
+        for req in requests:
+            self.batcher.add(req)
+        # all telemetry rolls back if the batch fails mid-flight, so a
+        # partial execution never inflates counters relative to `requests`
+        # (tiles that did run are re-executed if the caller retries)
+        snap_agg = copy.deepcopy(self._agg)
+        snap_batch = copy.deepcopy(self.batcher.stats)
+        snap_sched = copy.deepcopy(self.scheduler.stats)
+        snap_banks = [(b.tiles_served, b.rows_served, b.busy_cycles)
+                      for b in self.pool.banks]
+        try:
+            tiles = self.batcher.flush()
+            served = self.scheduler.run(tiles, self._execute)
+        except BaseException:
+            self._agg = snap_agg
+            self.batcher.stats = snap_batch
+            self.scheduler.stats = snap_sched
+            for bank, (t, r, c) in zip(self.pool.banks, snap_banks):
+                bank.tiles_served, bank.rows_served, bank.busy_cycles = t, r, c
+            raise
+        by_id: dict[int, SortResponse] = {}
+        t1 = time.perf_counter()
+        for tile, result in served:
+            for resp in self._scatter(tile, result, t1 - t0):
+                by_id[resp.request_id] = resp
+        self._agg["requests"] += len(requests)
+        self._latencies.extend([t1 - t0] * len(requests))
+        self._lat_sum += (t1 - t0) * len(requests)
+        self._lat_count += len(requests)
+        return [by_id[req.request_id] for req in requests]
+
+    def _execute(self, tile: Tile) -> TileResult:
+        backend = self.policy.choose(tile)
+        t0 = time.perf_counter()
+        result = backend.run(tile)
+        result.meta["wall_s"] = time.perf_counter() - t0
+        pb = self._agg["per_backend"].setdefault(
+            backend.name, {"tiles": 0, "requests": 0, "rows": 0,
+                           "column_reads": 0, "wall_s": 0.0})
+        pb["tiles"] += 1
+        pb["requests"] += len(tile.entries)
+        pb["rows"] += tile.shape[0]
+        pb["wall_s"] += result.meta["wall_s"]
+        if result.column_reads is not None:
+            pb["column_reads"] += int(result.column_reads.sum())
+            self._agg["column_reads"] += int(result.column_reads.sum())
+        if result.cycles is not None:
+            self._agg["cycles_exact"] += int(result.cycles.sum())
+        if result.estimated_cycles is not None:
+            self._agg["cycles_estimated"] += float(result.estimated_cycles)
+        n = tile.shape[1]
+        if str(n) not in self._agg["modeled_hw"]:   # compute once per width
+            self._agg["modeled_hw"][str(n)] = \
+                self.policy.modeled_throughput(n, self.config.state_k)
+        return result
+
+    def _scatter(self, tile: Tile, result: TileResult, latency_s: float):
+        for req, row in tile.entries:
+            out = req.out_len
+            vals_u = np.asarray(result.values[row, :out])
+            idxs = (np.asarray(result.indices[row, :out], np.int32)
+                    if result.indices is not None else None)
+            if self.config.verify:
+                ref_v, ref_i = solve_numpy(
+                    req.op, tile.data[row, :], req.k)
+                ok = np.array_equal(vals_u, ref_v[:out])
+                if ok and req.op in ("argsort", "topk", "kmin"):
+                    ok = idxs is not None and np.array_equal(idxs, ref_i[:out])
+                if not ok:
+                    self._agg["verify_failures"] += 1
+            yield SortResponse(
+                request_id=req.request_id,
+                op=req.op,
+                values=(None if req.op == "argsort"
+                        else decode_values(vals_u, req.payload.dtype)),
+                indices=None if req.op == "sort" else idxs,
+                backend=result.backend,
+                bucket_shape=tile.shape,
+                latency_s=latency_s,
+                column_reads=(int(result.column_reads[row])
+                              if result.column_reads is not None else None),
+                cycles=(int(result.cycles[row])
+                        if result.cycles is not None else None),
+                meta={"pad_cols": tile.shape[1] - req.n},
+            )
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> dict:
+        lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
+        bs = self.batcher.stats
+        return {
+            "requests": self._agg["requests"],
+            "latency_s": {          # mean is all-time; quantiles are windowed
+                "mean": (self._lat_sum / self._lat_count
+                         if self._lat_count else 0.0),
+                "p50": float(np.percentile(lat, 50)),
+                "p95": float(np.percentile(lat, 95)),
+                "max": float(lat.max()),
+            },
+            "column_reads": self._agg["column_reads"],
+            "cycles_exact": self._agg["cycles_exact"],
+            "cycles_estimated": self._agg["cycles_estimated"],
+            "verify_failures": self._agg["verify_failures"],
+            # copies: exported telemetry must not alias internal counters
+            "per_backend": copy.deepcopy(self._agg["per_backend"]),
+            "batcher": {
+                "tiles": bs.tiles,
+                "requests": bs.requests,
+                "pad_rows": bs.pad_rows,
+                "pad_col_frac": bs.pad_col_frac,
+                "bucket_hit_rate": bs.hit_rate,
+                "distinct_signatures": len(bs.signatures),
+            },
+            "scheduler": self.scheduler.telemetry(),
+            "modeled_hw_throughput_num_per_s": dict(self._agg["modeled_hw"]),
+        }
+
+    def dump_telemetry(self, path: str) -> dict:
+        telem = self.telemetry()
+        with open(path, "w") as f:
+            json.dump(telem, f, indent=2, sort_keys=True)
+        return telem
+
+
+class AsyncSortServe:
+    """Micro-batching async front door over a synchronous engine.
+
+    Requests submitted one at a time are collected for up to
+    ``max_wait_ms`` (or until ``max_batch`` are waiting) and served as one
+    engine batch — the standard continuous-batching trade of a little
+    latency for tile occupancy.
+    """
+
+    _STOP = object()
+
+    def __init__(self, engine: SortServeEngine, max_batch: int = 64,
+                 max_wait_ms: float = 2.0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, request: SortRequest) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("sort service closed")
+            self._q.put((request, fut))
+        return fut
+
+    def close(self) -> None:
+        """Serve everything already queued, then stop the collector.
+
+        Idempotent.  The lock orders every ``submit`` before the STOP
+        marker (or fails it), and ``_loop`` serves the queue tail behind
+        STOP before exiting — so every accepted future is resolved and
+        ``submit`` after ``close`` raises instead of enqueueing.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(self._STOP)
+        self._thread.join()
+
+    @staticmethod
+    def _resolve(fut: Future, resp=None, exc=None) -> None:
+        """Set a future's outcome, tolerating caller-side cancellation —
+        an InvalidStateError here must not kill the collector thread."""
+        try:
+            fut.set_exception(exc) if exc is not None else fut.set_result(resp)
+        except InvalidStateError:
+            pass
+
+    def _serve_batch(self, batch) -> None:
+        batch = [(r, f) for r, f in batch if not f.cancelled()]
+        if not batch:
+            return
+        reqs = [r for r, _ in batch]
+        try:
+            resps = self.engine.submit(reqs)
+        except Exception as e:
+            if len(batch) == 1:
+                self._resolve(batch[0][1], exc=e)
+                return
+            # requests from independent callers are co-batched here; one bad
+            # request must not fail its neighbours — retry them one by one so
+            # only the offender's future errors
+            for item in batch:
+                self._serve_batch([item])
+            return
+        for (_, fut), resp in zip(batch, resps):
+            self._resolve(fut, resp)
+
+    def _loop(self) -> None:
+        stop = False
+        while not stop:
+            item = self._q.get()
+            if item is self._STOP:
+                stop = True
+            else:
+                batch = [item]
+                deadline = time.perf_counter() + self.max_wait_s
+                while len(batch) < self.max_batch:
+                    timeout = deadline - time.perf_counter()
+                    if timeout <= 0:
+                        break
+                    try:
+                        nxt = self._q.get(timeout=timeout)
+                    except queue.Empty:
+                        break
+                    if nxt is self._STOP:
+                        stop = True
+                        break
+                    batch.append(nxt)
+                self._serve_batch(batch)
+        # STOP seen: drain whatever was already queued behind it so no
+        # accepted request leaves its future unresolved
+        tail = []
+        while True:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is not self._STOP:
+                tail.append(nxt)
+        if tail:
+            self._serve_batch(tail)

@@ -1,0 +1,216 @@
+"""Bank-pool scheduler modeled on the paper's §IV multi-bank manager.
+
+The hardware manager owns C memristive banks; a length-N dataset wider than
+one bank is sharded over several, and the manager OR-combines the per-bank
+predicates (saw-a-1 / saw-a-0, CR/SL enables) so the group behaves as one
+sorter.  The serving analogue implemented here:
+
+  * a fixed pool of :class:`LogicalBank` objects, each with ``bank_rows``
+    row-slots of ``bank_width`` columns and an occupancy counter;
+  * a tile of shape ``(B, N)`` occupies ``ceil(N / bank_width)`` banks
+    (its *shard group*), consuming ``B`` row-slots in each; shard banks are
+    chosen least-occupied-first to balance load;
+  * readiness mirrors the manager's gating: each shard bank raises a local
+    ``loaded`` bit, the manager AND-combines them into tile-ready and
+    OR-combines all tiles' bits into pool-busy (`any_pending`);
+  * a **drain policy** for oversized work: when a tile needs more banks or
+    row-slots than are currently free, placed tiles are executed and
+    retired oldest-first until it fits; a tile wider than the whole pool
+    (``shards > banks``) is executed in ``ceil(shards / banks)`` waves with
+    every bank enlisted — the §IV behaviour of a dataset larger than the
+    total bank capacity.
+
+Execution itself is delegated to a callback (the engine binds it to the
+cost policy + backend registry), so the scheduler is backend-agnostic and
+deterministic: tiles retire in FIFO order within each drain.
+
+Cycle accounting: all banks in a shard group step their column registers
+together (CR enables are OR-combined), so a tile's simulated cycle count is
+charged to *every* bank in its group — matching §V.C's result that
+multi-bank management changes area/power, never latency.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .batcher import Tile
+
+__all__ = ["BankPool", "LogicalBank", "Scheduler", "SchedulerStats"]
+
+
+@dataclass
+class LogicalBank:
+    """One bank: fixed row capacity plus serving telemetry."""
+
+    index: int
+    bank_rows: int
+    free_rows: int = field(init=False)
+    loaded: set = field(default_factory=set)   # tile ids resident here
+    tiles_served: int = 0
+    rows_served: int = 0
+    busy_cycles: int = 0
+
+    def __post_init__(self):
+        self.free_rows = self.bank_rows
+
+    def load(self, tile_id: int, rows: int) -> None:
+        assert rows <= self.free_rows, "placement bug: bank over-committed"
+        self.free_rows -= rows
+        self.loaded.add(tile_id)
+
+    def release(self, tile_id: int, rows: int) -> None:
+        self.free_rows += rows
+        self.loaded.discard(tile_id)
+
+
+@dataclass
+class _Placement:
+    tile: Tile
+    tile_id: int
+    bank_ids: list[int]
+    waves: int = 1
+
+
+class BankPool:
+    def __init__(self, banks: int = 8, bank_width: int = 1024, bank_rows: int = 8):
+        if banks < 1 or bank_width < 1 or bank_rows < 1:
+            raise ValueError("banks, bank_width, bank_rows must be >= 1")
+        self.bank_width = bank_width
+        self.banks = [LogicalBank(i, bank_rows) for i in range(banks)]
+
+    def shards_for(self, n_cols: int) -> int:
+        return -(-n_cols // self.bank_width)
+
+    def try_place(self, tile: Tile, tile_id: int) -> _Placement | None:
+        """Reserve a shard group for the tile, least-occupied banks first."""
+        b_rows, n_cols = tile.shape
+        shards = self.shards_for(n_cols)
+        if b_rows > self.banks[0].bank_rows:
+            return None                   # taller than any bank can ever hold
+        if shards > len(self.banks):
+            # oversized: only placeable into an idle pool, as wave execution
+            if all(b.free_rows == b.bank_rows for b in self.banks):
+                waves = -(-shards // len(self.banks))
+                for bank in self.banks:
+                    bank.load(tile_id, b_rows)
+                return _Placement(tile, tile_id, [b.index for b in self.banks],
+                                  waves=waves)
+            return None
+        free = sorted((b for b in self.banks if b.free_rows >= b_rows),
+                      key=lambda b: (b.bank_rows - b.free_rows, b.index))
+        if len(free) < shards:
+            return None
+        chosen = free[:shards]
+        for bank in chosen:
+            bank.load(tile_id, b_rows)
+        return _Placement(tile, tile_id, [b.index for b in chosen])
+
+    def ready(self, placement: _Placement) -> bool:
+        """Manager gate: AND of per-bank loaded bits for this tile."""
+        return all(placement.tile_id in self.banks[i].loaded
+                   for i in placement.bank_ids)
+
+    def any_pending(self) -> bool:
+        """OR-combined pool-busy predicate (the manager's global enable)."""
+        return any(bank.loaded for bank in self.banks)
+
+    def retire(self, placement: _Placement, cycles: int | None) -> None:
+        b_rows = placement.tile.shape[0]
+        for i in placement.bank_ids:
+            bank = self.banks[i]
+            bank.release(placement.tile_id, b_rows)
+            bank.tiles_served += 1
+            bank.rows_served += b_rows
+            if cycles is not None:
+                # synchronized column stepping: every shard bank is busy for
+                # the full tile latency (x waves for oversized tiles)
+                bank.busy_cycles += int(cycles) * placement.waves
+
+
+@dataclass
+class SchedulerStats:
+    tiles: int = 0
+    drains: int = 0
+    oversized_tiles: int = 0
+    oversized_waves: int = 0
+    max_banks_in_flight: int = 0
+
+
+class Scheduler:
+    """FIFO tile scheduler over a :class:`BankPool`."""
+
+    def __init__(self, pool: BankPool):
+        self.pool = pool
+        self.stats = SchedulerStats()
+
+    def run(self, tiles: list[Tile],
+            execute: Callable[[Tile], object]) -> list[tuple[Tile, object]]:
+        """Serve every tile; returns (tile, backend result) in retire order."""
+        results: list[tuple[Tile, object]] = []
+        placed: list[_Placement] = []
+        pending = list(tiles)
+        next_id = 0
+
+        def drain(count: int | None = None) -> None:
+            self.stats.drains += 1
+            n = len(placed) if count is None else min(count, len(placed))
+            for _ in range(n):
+                pl = placed[0]                # oldest-first
+                assert self.pool.ready(pl), "executed a tile before all banks loaded"
+                result = execute(pl.tile)
+                cycles = getattr(result, "cycles", None)
+                total = int(cycles.sum()) if cycles is not None else None
+                self.pool.retire(pl, total)
+                placed.pop(0)                 # only after banks are released
+                results.append((pl.tile, result))
+
+        try:
+            while pending:
+                tile = pending.pop(0)
+                while True:
+                    pl = self.pool.try_place(tile, next_id)
+                    if pl is not None:
+                        break
+                    if not placed:            # idle pool and still no fit
+                        raise ValueError(
+                            f"tile {tile.shape} cannot be placed even on an "
+                            f"idle pool: need bank_rows >= {tile.shape[0]} "
+                            f"(have {self.pool.banks[0].bank_rows})")
+                    drain(count=1)            # free the oldest shard group
+                next_id += 1
+                placed.append(pl)
+                self.stats.tiles += 1
+                if pl.waves > 1:
+                    self.stats.oversized_tiles += 1
+                    self.stats.oversized_waves += pl.waves
+                in_flight = sum(1 for b in self.pool.banks if b.loaded)
+                self.stats.max_banks_in_flight = max(
+                    self.stats.max_banks_in_flight, in_flight)
+            if self.pool.any_pending():
+                drain()
+        except BaseException:
+            # a failed batch must not poison the pool: release whatever is
+            # still loaded (no telemetry credit) before propagating
+            for pl in placed:
+                b_rows = pl.tile.shape[0]
+                for i in pl.bank_ids:
+                    self.pool.banks[i].release(pl.tile_id, b_rows)
+            raise
+        assert not self.pool.any_pending(), "banks left loaded after final drain"
+        return results
+
+    def telemetry(self) -> dict:
+        return {
+            "tiles": self.stats.tiles,
+            "drains": self.stats.drains,
+            "oversized_tiles": self.stats.oversized_tiles,
+            "oversized_waves": self.stats.oversized_waves,
+            "max_banks_in_flight": self.stats.max_banks_in_flight,
+            "banks": [
+                {"index": b.index, "tiles_served": b.tiles_served,
+                 "rows_served": b.rows_served, "busy_cycles": b.busy_cycles}
+                for b in self.pool.banks
+            ],
+        }

@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests skip (not error) when absent.
+
+Usage in a test module::
+
+    from _hypothesis_compat import given, settings, st
+
+When hypothesis is installed these are the real objects.  When it is not,
+``given``/``settings`` become decorators that attach ``pytest.mark.skip``
+and ``st`` accepts any strategy-construction call, so the module still
+imports and its non-property tests run normally.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
+
+    def _skip_deco(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = _skip_deco
+    settings = _skip_deco
+
+    class _AnyStrategy:
+        """Swallows st.lists(...), st.integers(...), etc."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -5,6 +5,13 @@ import json
 import subprocess
 import sys
 
+import pytest
+
+# the dryrun driver imports repro.dist.sharding at module level; skip (not
+# fail) while that subsystem is absent from this tree (see ROADMAP.md)
+pytest.importorskip("repro.dist.sharding",
+                    reason="repro.dist not present in this tree")
+
 
 def test_dryrun_cell_whisper_decode(tmp_path):
     out = subprocess.run(

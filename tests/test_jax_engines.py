@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import colskip_sort, colskip_sort_jax, make_dataset, topk, topk_mask
 from repro.core.topk import from_sortable_uint, to_sortable_uint

@@ -1,0 +1,390 @@
+"""sortserve subsystem: e2e oracle equality, telemetry exactness, scheduling."""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import colskip_sort, make_dataset, multibank_colskip_sort
+from repro.launch.sortserve import check_against_oracle, make_workload
+from repro.sortserve import (
+    AsyncSortServe,
+    BankPool,
+    Batcher,
+    EngineConfig,
+    Scheduler,
+    SortRequest,
+    SortServeEngine,
+    encode_payload,
+    pow2_bucket,
+)
+from repro.sortserve.batcher import PAD_ASC, PAD_DESC
+from repro.sortserve.request import decode_values
+
+
+def small_engine(**over):
+    cfg = dict(backends=("colskip", "radix_topk", "jaxsort", "numpy"),
+               tile_rows=4, min_bucket=8, banks=4, bank_width=64,
+               bank_rows=4, sim_width_cap=128)
+    cfg.update(over)
+    return SortServeEngine(EngineConfig(**cfg))
+
+
+# --------------------------------------------------------------- encoding
+def test_encode_matches_to_sortable_uint_and_roundtrips():
+    import jax.numpy as jnp
+
+    from repro.core.topk import to_sortable_uint
+
+    rng = np.random.default_rng(0)
+    floats = (rng.normal(size=256) * 1e4).astype(np.float32)
+    ints = rng.integers(-(1 << 31), 1 << 31, 256, dtype=np.int64).astype(np.int32)
+    uints = rng.integers(0, 1 << 32, 256, dtype=np.uint64).astype(np.uint32)
+    for x in (floats, ints, uints):
+        ours = encode_payload(x)
+        ref = np.asarray(to_sortable_uint(jnp.asarray(x)))
+        assert np.array_equal(ours, ref)
+        assert np.array_equal(decode_values(ours, x.dtype), x)
+    halfs = rng.normal(size=64).astype(np.float16)
+    assert np.array_equal(decode_values(encode_payload(halfs), np.float16), halfs)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        SortRequest("sort", np.zeros((2, 2), np.uint32))
+    with pytest.raises(ValueError):
+        SortRequest("topk", np.arange(4, dtype=np.uint32))          # no k
+    with pytest.raises(ValueError):
+        SortRequest("topk", np.arange(4, dtype=np.uint32), k=5)     # k > n
+    with pytest.raises(ValueError):
+        SortRequest("sort", np.arange(4, dtype=np.uint32), k=2)     # stray k
+    with pytest.raises(TypeError):
+        SortRequest("sort", np.arange(4, dtype=np.float64))
+
+
+# ------------------------------------------------------------------ batcher
+def test_batcher_pow2_buckets_fixed_tiles_and_sentinels():
+    b = Batcher(tile_rows=4, min_bucket=8)
+    reqs = [SortRequest("sort", np.arange(n, dtype=np.uint32))
+            for n in (3, 9, 17, 17, 33)]
+    reqs.append(SortRequest("topk", np.arange(20, dtype=np.uint32), k=3))
+    for r in reqs:
+        b.add(r)
+    tiles = b.flush()
+    assert b.pending() == 0
+    for t in tiles:
+        bb, n = t.shape
+        assert bb == 4 and n == pow2_bucket(n)                  # fixed shape
+        pad = PAD_DESC if t.op == "topk" else PAD_ASC
+        for req, row in t.entries:
+            assert np.array_equal(t.data[row, :req.n], encode_payload(req.payload))
+            assert (t.data[row, req.n:] == pad).all()
+        assert (t.data[len(t.entries):] == pad).all()           # pad rows
+    widths = sorted(t.shape[1] for t in tiles if t.op == "sort")
+    assert widths == [8, 16, 32, 64]      # 3->8; 9->16; 17,17->32; 33->64
+    assert {t.k for t in tiles if t.op == "topk"} == {4}        # pow2(3)
+
+
+def test_batcher_signature_hit_rate():
+    b = Batcher(tile_rows=2)
+    for _ in range(2):
+        for i in range(4):
+            b.add(SortRequest("sort", np.arange(10, dtype=np.uint32)))
+        b.flush()
+    # 4 tiles, all sharing one (op, B, N, k) signature -> 3 hits
+    assert b.stats.tiles == 4
+    assert b.stats.signature_hits == 3
+    assert b.stats.hit_rate == 0.75
+
+
+# ---------------------------------------------------------------- scheduler
+class _CountingExec:
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, tile):
+        self.calls.append(tile.shape)
+        return type("R", (), {"cycles": np.full(tile.shape[0], 10)})()
+
+
+def test_scheduler_occupancy_drain_and_bank_telemetry():
+    pool = BankPool(banks=2, bank_width=64, bank_rows=4)
+    sched = Scheduler(pool)
+    b = Batcher(tile_rows=4, min_bucket=8)
+    for _ in range(8):                      # two (4, 128) tiles, 2 shards each
+        b.add(SortRequest("sort", np.arange(100, dtype=np.uint32)))
+    tiles = b.flush()
+    assert [t.shape for t in tiles] == [(4, 128), (4, 128)]
+    ex = _CountingExec()
+    results = sched.run(tiles, ex)
+    assert len(results) == 2
+    # second tile could not coexist (both banks full) -> a forced drain
+    assert sched.stats.drains >= 2
+    telem = sched.telemetry()
+    assert all(bk["tiles_served"] == 2 for bk in telem["banks"])
+    assert all(bk["rows_served"] == 8 for bk in telem["banks"])
+    # synchronized stepping: each shard bank charged the full tile cycles
+    assert all(bk["busy_cycles"] == 2 * 4 * 10 for bk in telem["banks"])
+    assert all(bk.free_rows == bk.bank_rows for bk in pool.banks)
+
+
+def test_scheduler_capacity_misuse_raises_value_error():
+    """Tiles taller than bank_rows get a clear error, not an assert/spin."""
+    pool = BankPool(banks=2, bank_width=64, bank_rows=2)
+    b = Batcher(tile_rows=4, min_bucket=8)
+    b.add(SortRequest("sort", np.arange(16, dtype=np.uint32)))
+    with pytest.raises(ValueError, match="bank_rows"):
+        Scheduler(pool).run(b.flush(), _CountingExec())
+    # same contract on the oversized (wave) path: width forces 8 shards > 2
+    pool2 = BankPool(banks=2, bank_width=32, bank_rows=2)
+    b2 = Batcher(tile_rows=4, min_bucket=8)
+    b2.add(SortRequest("sort", np.arange(256, dtype=np.uint32)))
+    with pytest.raises(ValueError, match="bank_rows"):
+        Scheduler(pool2).run(b2.flush(), _CountingExec())
+
+
+def test_scheduler_oversized_tile_runs_in_waves():
+    pool = BankPool(banks=2, bank_width=32, bank_rows=4)
+    sched = Scheduler(pool)
+    b = Batcher(tile_rows=4, min_bucket=8)
+    b.add(SortRequest("sort", np.arange(256, dtype=np.uint32)))  # 8 shards > 2
+    tiles = b.flush()
+    ex = _CountingExec()
+    sched.run(tiles, ex)
+    assert sched.stats.oversized_tiles == 1
+    assert sched.stats.oversized_waves == 4                     # ceil(8/2)
+    assert len(ex.calls) == 1
+
+
+# ----------------------------------------------------------- end-to-end
+def test_e2e_mixed_stream_matches_numpy_oracle():
+    engine = small_engine()
+    reqs = make_workload(60, min_len=8, max_len=128, seed=42)
+    resps = engine.submit(reqs)
+    assert len(resps) == 60
+    for req, resp in zip(reqs, resps):
+        assert check_against_oracle(req, resp), (req.op, req.n, resp.backend)
+    telem = engine.telemetry()
+    assert telem["requests"] == 60
+    assert len(telem["per_backend"]) >= 2
+    assert telem["column_reads"] > 0
+    used_widths = {r.bucket_shape[1] for r in resps}
+    assert all(w == pow2_bucket(w) for w in used_widths)
+
+
+def test_colskip_backend_cycles_match_hardware_model():
+    """Per-request telemetry == the numpy §III simulator, cycle-exact."""
+    engine = small_engine(tile_rows=1, bank_rows=1)
+    rng = np.random.default_rng(5)
+    for n in (16, 64, 128):                # pow-2 lengths: no column padding
+        v = make_dataset("mapreduce", n, 32, seed=3)
+        payload = v.astype(np.uint32)
+        req = SortRequest("sort", payload, backend="colskip")
+        resp = engine.submit([req])[0]
+        hw = colskip_sort(payload.astype(np.uint64), w=32, k=2)
+        assert resp.backend == "colskip"
+        assert resp.cycles == hw.cycles
+        assert resp.column_reads == hw.column_reads
+        assert np.array_equal(resp.values, hw.values.astype(np.uint32))
+        # non-pow2 length: telemetry covers the padded row instead
+        m = n - 3
+        resp2 = engine.submit(
+            [SortRequest("sort", payload[:m], backend="colskip")])[0]
+        padded = np.full(n, 0xFFFFFFFF, np.uint64)
+        padded[:m] = payload[:m]
+        hw2 = colskip_sort(padded, w=32, k=2)
+        assert resp2.cycles == hw2.cycles
+        assert resp2.column_reads == hw2.column_reads
+    del rng
+
+
+@pytest.mark.parametrize("state_k,banks", [(1, 2), (2, 4), (3, 8), (2, 16)])
+def test_multibank_vs_colskip_cycle_equality(state_k, banks):
+    """§V.C regression: bank management never changes cycles or order."""
+    for dataset in ("uniform", "mapreduce"):
+        v = make_dataset(dataset, 128, 32, seed=13)
+        mono = colskip_sort(v, 32, state_k)
+        mb = multibank_colskip_sort(v, 32, state_k, banks=banks)
+        assert mb.cycles == mono.cycles
+        assert mb.column_reads == mono.column_reads
+        assert np.array_equal(mb.order, mono.order)
+        assert np.array_equal(mb.values, mono.values)
+
+
+def test_cost_policy_routing():
+    engine = small_engine(sim_width_cap=64)
+    rng = np.random.default_rng(0)
+    r_narrow = SortRequest("sort", rng.integers(0, 99, 32, np.int64).astype(np.uint32))
+    r_wide = SortRequest("sort", rng.integers(0, 99, 128, np.int64).astype(np.uint32))
+    r_topk = SortRequest("topk", rng.normal(size=64).astype(np.float32), k=4)
+    narrow, wide, tk = engine.submit([r_narrow, r_wide, r_topk])
+    assert narrow.backend == "colskip"        # within the simulation cap
+    assert wide.backend == "jaxsort"          # beyond it
+    assert tk.backend == "radix_topk"         # selection op
+
+
+def test_hinted_requests_never_coalesce_with_unhinted():
+    """A hint routes only its own request; co-submitted same-shape requests
+    keep policy routing (hints are part of the bucket key)."""
+    engine = small_engine(sim_width_cap=64)
+    payload = np.arange(32, dtype=np.uint32)
+    hinted = SortRequest("sort", payload, backend="numpy")
+    plain = SortRequest("sort", payload.copy())
+    r_hint, r_plain = engine.submit([hinted, plain])
+    assert r_hint.backend == "numpy"
+    assert r_plain.backend == "colskip"
+
+
+def test_unservable_op_rejected_at_ingress():
+    """A request no enabled backend can serve fails before any tile runs."""
+    engine = small_engine(backends=("radix_topk",))
+    good = SortRequest("topk", np.arange(16, dtype=np.uint32), k=2)
+    bad = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    with pytest.raises(ValueError, match="no enabled backend"):
+        engine.submit([good, bad])
+    assert engine.telemetry()["requests"] == 0      # nothing half-executed
+
+
+def test_failed_batch_rolls_back_all_telemetry():
+    """A mid-batch failure leaves every telemetry section as it was."""
+    engine = small_engine()
+    engine.submit(make_workload(8, min_len=8, max_len=64, seed=11))
+    before = engine.telemetry()
+    bad = SortRequest("sort", np.arange(16, dtype=np.uint32), backend="numpy")
+    # poison the policy so execution (not ingress) fails mid-batch
+    engine.policy.by_name["numpy"].run = None
+    with pytest.raises(TypeError):
+        engine.submit([SortRequest("sort", np.arange(16, dtype=np.uint32)),
+                       bad])
+    assert engine.telemetry() == before
+
+
+def test_backend_hint_and_unknown_backend():
+    engine = small_engine(backends=("numpy",))
+    req = SortRequest("sort", np.arange(8, dtype=np.uint32), backend="colskip")
+    with pytest.raises(KeyError):
+        engine.submit([req])
+    resp = engine.submit([SortRequest("sort", np.arange(8, dtype=np.uint32),
+                                      backend="numpy")])[0]
+    assert resp.backend == "numpy"
+
+
+def test_verify_mode_flags_no_failures_on_good_backends():
+    engine = small_engine(verify=True)
+    reqs = make_workload(24, min_len=8, max_len=64, seed=7)
+    engine.submit(reqs)
+    assert engine.telemetry()["verify_failures"] == 0
+
+
+def test_async_wrapper_matches_sync():
+    sync = small_engine()
+    reqs = make_workload(12, min_len=8, max_len=64, seed=9)
+    expected = {q.request_id: r for q, r in zip(reqs, sync.submit(reqs))}
+
+    server = AsyncSortServe(small_engine(), max_batch=8, max_wait_ms=20.0)
+    futures = [server.submit(q) for q in reqs]
+    got = [f.result(timeout=120) for f in futures]
+    server.close()
+    for q, resp in zip(reqs, got):
+        exp = expected[q.request_id]
+        assert resp.backend == exp.backend
+        if exp.values is not None:
+            assert np.array_equal(resp.values, exp.values)
+        if exp.indices is not None:
+            assert np.array_equal(resp.indices, exp.indices)
+
+
+def test_async_bad_request_does_not_fail_neighbours():
+    """One invalid co-batched request fails alone; neighbours still serve."""
+    server = AsyncSortServe(small_engine(backends=("numpy",)),
+                            max_batch=4, max_wait_ms=50.0)
+    good = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    bad = SortRequest("sort", np.arange(16, dtype=np.uint32), backend="colskip")
+    f_good, f_bad = server.submit(good), server.submit(bad)
+    server.close()
+    assert check_against_oracle(good, f_good.result(timeout=60))
+    with pytest.raises(KeyError):
+        f_bad.result(timeout=60)
+
+
+def test_async_cancelled_future_does_not_kill_collector():
+    server = AsyncSortServe(small_engine(), max_batch=2, max_wait_ms=30.0)
+    doomed = server.submit(SortRequest("sort", np.arange(8, dtype=np.uint32)))
+    doomed.cancel()
+    good = SortRequest("sort", np.arange(8, dtype=np.uint32))
+    fut = server.submit(good)
+    assert check_against_oracle(good, fut.result(timeout=60))
+    server.close()                       # would hang if the collector died
+
+
+def test_async_close_serves_already_queued_requests():
+    """Every future accepted before close() is served, never left hanging."""
+    server = AsyncSortServe(small_engine(), max_batch=4, max_wait_ms=1.0)
+    reqs = make_workload(6, min_len=8, max_len=32, seed=3)
+    futures = [server.submit(q) for q in reqs]
+    server.close()
+    for q, f in zip(reqs, futures):
+        assert check_against_oracle(q, f.result(timeout=60))
+
+
+def test_async_close_is_idempotent_and_rejects_late_submits():
+    server = AsyncSortServe(small_engine(), max_batch=4, max_wait_ms=1.0)
+    server.close()
+    server.close()                                   # second close: no-op
+    with pytest.raises(RuntimeError):
+        server.submit(SortRequest("sort", np.arange(8, dtype=np.uint32)))
+
+
+def test_cost_policy_over_cap_prefers_non_simulating_backend():
+    """Width past sim_width_cap must not fall back onto the simulator when a
+    cheap backend is enabled."""
+    engine = small_engine(backends=("colskip", "numpy"), sim_width_cap=64)
+    resp = engine.submit(
+        [SortRequest("sort", np.arange(256, dtype=np.uint32))])[0]
+    assert resp.backend == "numpy"
+    # ...but the simulator still serves when it is the only option
+    engine2 = small_engine(backends=("colskip",), sim_width_cap=64)
+    resp2 = engine2.submit(
+        [SortRequest("sort", np.arange(256, dtype=np.uint32))])[0]
+    assert resp2.backend == "colskip"
+
+
+def test_duplicate_request_ids_rejected_at_ingress():
+    engine = small_engine()
+    a = SortRequest("sort", np.arange(8, dtype=np.uint32), request_id=7)
+    b = SortRequest("kmin", np.arange(8, dtype=np.uint32), k=2, request_id=7)
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        engine.submit([a, b])
+    # engine unharmed: a fresh well-formed batch still serves
+    assert engine.submit([SortRequest("sort", np.arange(8, dtype=np.uint32))])
+
+
+def test_backend_kwargs_cannot_shadow_engine_w_state_k():
+    with pytest.raises(ValueError):
+        small_engine(backend_kwargs={"colskip": {"w": 16}})
+    # non-conflicting keys still pass through
+    eng = small_engine(backend_kwargs={"colskip": {"use_pallas": None}})
+    assert eng.policy.by_name["colskip"].w == 32
+
+
+def test_telemetry_json_roundtrip(tmp_path):
+    import json
+
+    engine = small_engine()
+    engine.submit(make_workload(10, min_len=8, max_len=32, seed=1))
+    path = tmp_path / "telemetry.json"
+    telem = engine.dump_telemetry(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["requests"] == telem["requests"] == 10
+    assert "bucket_hit_rate" in loaded["batcher"]
+    assert len(loaded["scheduler"]["banks"]) == 4
+
+
+# ------------------------------------------------------------- properties
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), n_req=st.integers(1, 12))
+def test_property_served_stream_equals_oracle(seed, n_req):
+    engine = small_engine(backends=("colskip", "radix_topk", "jaxsort"))
+    reqs = make_workload(n_req, min_len=4, max_len=48, seed=seed)
+    for req, resp in zip(reqs, engine.submit(reqs)):
+        assert check_against_oracle(req, resp)
