@@ -1,0 +1,71 @@
+"""Distributed sort-serving: MeshBankPool vs the single-process BankPool.
+
+Serves the same seeded workload through the local ``colskip`` engine and the
+mesh-sharded ``colskip_mesh`` engine (shard groups on jax devices, one psum
+per bit plane) and reports tiles/s for each, plus the §V.C invariant that
+distribution must not change the modeled hardware: the derived column carries
+``cycle_parity=ok`` only when both engines exported identical exact-cycle and
+column-read telemetry.
+
+Run standalone with more banks via:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python -m benchmarks.run --only distserve
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
+
+
+def _workload(rng, n_requests: int, lens=(64, 128, 256)):
+    reqs = []
+    for i in range(n_requests):
+        n = int(rng.choice(lens))
+        payload = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+        if i % 3 == 2:
+            reqs.append(SortRequest("kmin", payload, k=int(rng.integers(1, 9))))
+        else:
+            reqs.append(SortRequest("sort", payload))
+    return reqs
+
+
+def _engine(mesh: bool) -> SortServeEngine:
+    return SortServeEngine(EngineConfig(
+        backends=("colskip_mesh",) if mesh else ("colskip",),
+        mesh=mesh, tile_rows=8, banks=8, bank_width=256,
+        sim_width_cap=4096, cache_size=0))
+
+
+def _serve(mesh: bool, reqs):
+    """Warm jit signatures on a throwaway engine, then measure a fresh one."""
+    _engine(mesh).submit([SortRequest(q.op, q.payload.copy(), k=q.k)
+                          for q in reqs])
+    engine = _engine(mesh)
+    t0 = time.perf_counter()
+    engine.submit([SortRequest(q.op, q.payload.copy(), k=q.k) for q in reqs])
+    return time.perf_counter() - t0, engine.telemetry()
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    reqs = _workload(rng, 48)
+
+    dt_local, tl = _serve(False, reqs)
+    dt_mesh, tm = _serve(True, reqs)
+
+    parity = ("ok" if tl["cycles_exact"] == tm["cycles_exact"]
+              and tl["column_reads"] == tm["column_reads"] else
+              f"MISMATCH local={tl['cycles_exact']} mesh={tm['cycles_exact']}")
+    n_banks = tm["scheduler"]["banks"]
+    for name, dt, telem in (("distserve_local_pool", dt_local, tl),
+                            ("distserve_mesh_pool", dt_mesh, tm)):
+        tiles = telem["batcher"]["tiles"]
+        report(name, dt / max(tiles, 1) * 1e6,
+               f"tiles_per_s={tiles / dt:.1f} req={telem['requests']} "
+               f"cycles={telem['cycles_exact']} banks={len(n_banks)} "
+               f"cycle_parity={parity}")

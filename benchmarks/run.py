@@ -21,6 +21,7 @@ SUITES = [
     "benchmarks.kernel_bench",
     "benchmarks.serving_bench",
     "benchmarks.sortserve_bench",
+    "benchmarks.distserve_bench",
 ]
 
 

@@ -71,10 +71,21 @@ class StateController:
         return None
 
 
-def colskip_sort(values: np.ndarray, w: int = 32, k: int = 2) -> SortResult:
-    """Column-skipping sort; returns order, values, and exact cycle counts."""
+def colskip_sort(values: np.ndarray, w: int = 32, k: int = 2,
+                 stop_after: int | None = None) -> SortResult:
+    """Column-skipping sort; returns order, values, and exact cycle counts.
+
+    ``stop_after=k'`` is the k-early-exit drain (top of ROADMAP follow-ups):
+    the hardware stops after the first ``k'`` minima are produced instead of
+    completing the sort, so ``order``/``values`` have length ``k'`` and the
+    cycle count covers only the iterations (and partial final drain) actually
+    executed — the k-min serving mode of the §III machine.
+    """
     mem = BitMatrix(values, w)
     n = mem.n
+    stop = n if stop_after is None else min(int(stop_after), n)
+    if stop < 1:
+        raise ValueError(f"stop_after={stop_after} must be >= 1")
     sorted_mask = np.zeros(n, dtype=bool)
     table = StateController(k)
     s_top = w - 1                 # deepest certified uniform-prefix column
@@ -82,7 +93,7 @@ def colskip_sort(values: np.ndarray, w: int = 32, k: int = 2) -> SortResult:
     crs = 0
     drains = 0
     iterations = 0
-    remaining = n
+    remaining = stop
 
     while remaining > 0:
         iterations += 1
@@ -112,6 +123,11 @@ def colskip_sort(values: np.ndarray, w: int = 32, k: int = 2) -> SortResult:
         rows = np.flatnonzero(alive)
         m = len(rows)
         assert m >= 1, "min search lost all rows — algorithm bug"
+        # early exit: only the still-needed duplicates leave the row
+        # processor (survivors of a full traversal are all equal, so any
+        # prefix of them in row order is a correct k-min prefix)
+        m = min(m, remaining)
+        rows = rows[:m]
         # duplicates drain one per cycle while the column processor stalls
         drains += m - 1
         for r in rows:
@@ -128,5 +144,5 @@ def colskip_sort(values: np.ndarray, w: int = 32, k: int = 2) -> SortResult:
         column_reads=crs,
         drains=drains,
         iterations=iterations,
-        meta={"algo": "colskip", "w": w, "k": k},
+        meta={"algo": "colskip", "w": w, "k": k, "stop_after": stop},
     )

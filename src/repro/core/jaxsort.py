@@ -33,14 +33,21 @@ class _State(NamedTuple):
     drains: jax.Array         # () int32
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2):
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2,
+                     stop_after: int | None = None):
     """Sort ``values`` (uint32 (N,)) ascending with the column-skipping HW model.
 
-    Returns ``(sorted_values, order, column_reads, cycles)``.
+    Returns ``(sorted_values, order, column_reads, cycles)``.  With
+    ``stop_after=k'`` the machine exits after draining the first ``k'``
+    minima (k-early-exit serving mode): outputs have length ``k'`` and the
+    cycle count covers only the executed iterations.
     """
     values = values.astype(jnp.uint32)
     n = values.shape[0]
+    stop = n if stop_after is None else min(int(stop_after), n)
+    if stop < 1:
+        raise ValueError(f"stop_after={stop_after} must be >= 1")
     karr = max(1, k)
 
     def load(st: _State):
@@ -90,10 +97,15 @@ def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2):
         st = st._replace(table_valid=valid0)
         alive, sigs, masks, valid, s_top, _, crs = traverse(alive, start, fresh, st)
         m = alive.sum().astype(jnp.int32)
+        # k-early-exit: survivors of a full traversal are all duplicates of
+        # the current min, so draining only the still-needed prefix (in row
+        # order) is exact and costs one stall cycle per extra element
+        m = jnp.minimum(m, stop - st.count)
         rank = jnp.cumsum(alive) - 1
-        out_pos = jnp.where(alive, st.count + rank, st.out_pos)
+        keep = alive & (rank < m)
+        out_pos = jnp.where(keep, st.count + rank, st.out_pos)
         return _State(
-            sorted_mask=st.sorted_mask | alive,
+            sorted_mask=st.sorted_mask | keep,
             table_sigs=sigs, table_masks=masks, table_valid=valid,
             s_top=s_top, out_pos=out_pos,
             count=st.count + m, crs=crs, drains=st.drains + m - 1,
@@ -108,6 +120,9 @@ def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2):
         out_pos=jnp.zeros((n,), jnp.int32),
         count=jnp.int32(0), crs=jnp.int32(0), drains=jnp.int32(0),
     )
-    st = jax.lax.while_loop(lambda s: s.count < n, body, st0)
-    order = jnp.zeros((n,), jnp.int32).at[st.out_pos].set(jnp.arange(n, dtype=jnp.int32))
+    st = jax.lax.while_loop(lambda s: s.count < stop, body, st0)
+    # undrained rows scatter out of bounds and are dropped
+    pos = jnp.where(st.sorted_mask, st.out_pos, stop)
+    order = jnp.zeros((stop,), jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
     return values[order], order, st.crs, st.crs + st.drains

@@ -1,0 +1,83 @@
+"""Forward-compat shims so `repro.dist` runs on jax 0.4.x.
+
+The distributed subsystem (and the model code that plugs into it, e.g. the
+shard_map MoE path) is written against the modern jax surface:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+
+On jax 0.4.x those spell ``jax.experimental.shard_map.shard_map`` (with the
+``check_rep`` kwarg) and a ``make_mesh`` without ``axis_types``.  This module
+installs the modern names when absent — the same ship-on-what-the-container-
+has policy as ``tests/_hypothesis_compat.py``.  On a new-enough jax it is a
+no-op, so nothing here pins behaviour to the old API.
+
+Two deliberate choices:
+
+  * the shimmed ``shard_map`` defaults to ``check_rep=False``: 0.4.x
+    replication tracking mis-handles the psum-in-scan carries used by
+    :mod:`repro.core.distsort` (the documented workaround in
+    tests/test_distsort.py); newer jax fixed the tracker and renamed the
+    knob to ``check_vma``, so disabling the old checker best matches the
+    semantics callers write against;
+  * ``axis_types`` is accepted and dropped — 0.4.x meshes are implicitly
+    Auto, which is exactly what every caller in this tree passes.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+__all__ = ["install", "shard_map"]
+
+
+def _compat_shard_map(f=None, mesh=None, in_specs=None, out_specs=None, *,
+                      check_vma=None, check_rep=None, axis_names=None,
+                      **kwargs):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if f is None:                      # used as jax.shard_map(mesh=..., ...)
+        return functools.partial(
+            _compat_shard_map, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=check_vma, check_rep=check_rep)
+    if check_rep is None:
+        # modern check_vma maps onto old check_rep; default False (see above)
+        check_rep = bool(check_vma) if check_vma is not None else False
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep, **kwargs)
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _wrap_make_mesh(orig):
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types                 # 0.4.x meshes are implicitly Auto
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    make_mesh._repro_compat = True
+    return make_mesh
+
+
+def install() -> None:
+    """Idempotently install the modern names onto the jax modules."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+        if not getattr(jax.make_mesh, "_repro_compat", False):
+            jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+
+
+install()
+
+# the canonical entry point for repro code: always the (possibly shimmed)
+# modern API, so call sites read identically on every jax
+shard_map = jax.shard_map

@@ -1,0 +1,146 @@
+"""Mesh-sharded bank pool: §IV multi-bank management on real devices.
+
+The sortserve :class:`~repro.sortserve.scheduler.BankPool` is a single-process
+model of the paper's bank manager — shard groups, drain policy, wave
+execution.  This module is the distributed realization: a tile's columns are
+sharded over a mesh axis (each device is one bank of the shard group) and the
+column-skipping sort runs with the manager's OR-gates as collectives:
+
+  * the mixed-column judgement is **one ``psum`` per bit plane** — the two
+    saw-a-1 / saw-a-0 predicate bits of every bank, stacked and reduced
+    together (the ``en_sync`` broadcast of the manager circuit);
+  * state-table liveness (SL) is a ``psum`` of per-entry local hit bits;
+  * the duplicate drain is bank-major: an ``all_gather`` of per-bank survivor
+    counts gives every bank the exclusive prefix it needs to place its rows.
+
+Because §V.C's result — bank management never changes the cycle count — holds
+for the collective realization too, :class:`MeshBankPool` telemetry is
+**bit-identical** to the single-process pool (asserted in tests), and the
+backend may freely fall back to one bank when a tile's width does not divide
+the mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sortserve.scheduler import BankPool
+
+from ._jaxcompat import shard_map
+
+__all__ = ["MeshBankPool", "colskip_sort_mesh", "make_bank_mesh"]
+
+
+def make_bank_mesh(devices=None, axis_name: str = "banks"):
+    """One-axis mesh over the given (default: all) devices."""
+    devs = list(devices if devices is not None else jax.devices())
+    return jax.make_mesh((len(devs),), (axis_name,), devices=devs)
+
+
+def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str):
+    """Per-bank body of the sharded sort (called inside ``shard_map``).
+
+    ``u_local``: (TB, N_local) — this bank's column shard of the tile.  The
+    §III state machine itself is the shared
+    :func:`repro.kernels.colskip.kernel.colskip_machine`; this wrapper only
+    supplies the manager's combine points as collectives and assembles the
+    global output.  Returns replicated ``(values (TB, stop), order (TB,
+    stop), crs (TB,), cycles (TB,))`` matching the monolithic kernel
+    bit-for-bit.
+    """
+    from repro.kernels.colskip.kernel import colskip_machine
+
+    u = u_local.astype(jnp.uint32)
+    tb, n_loc = u.shape
+    nbanks = jax.lax.psum(1, axis_name)            # concrete: axis size
+    bank = jax.lax.axis_index(axis_name)
+    stop = min(stop, n_loc * nbanks)
+
+    def or_any(local_bits):
+        """Manager OR-gate: psum of stacked predicate bits, one collective
+        per bit plane (both saw-a-1/saw-a-0 bits ride the same psum)."""
+        return jax.lax.psum(local_bits.astype(jnp.int32), axis_name) > 0
+
+    def drain_counts(m_local):
+        """Bank-major drain: every bank learns all survivor counts via one
+        all_gather and takes its exclusive prefix."""
+        m_all = jax.lax.all_gather(m_local, axis_name)             # (C, TB)
+        before = jnp.where(jnp.arange(nbanks)[:, None] < bank,
+                           m_all, 0).sum(0)                        # (TB,)
+        return m_all.sum(0), before
+
+    sorted_mask, out_pos, crs, drains = colskip_machine(
+        u, w, k, stop, or_any=or_any, drain_counts=drain_counts)
+
+    # output select: each bank scatters its drained rows into the global
+    # (TB, stop) result; a psum assembles + broadcasts it (zeros elsewhere)
+    rows = jnp.broadcast_to(jnp.arange(tb)[:, None], (tb, n_loc))
+    cols = bank * n_loc + jnp.arange(n_loc, dtype=jnp.int32)[None, :]
+    cols = jnp.broadcast_to(cols, (tb, n_loc))
+    pos = jnp.where(sorted_mask, out_pos, stop)      # undrained -> dropped
+    order_l = jnp.zeros((tb, stop), jnp.int32).at[rows, pos].set(
+        cols, mode="drop")
+    vals_l = jnp.zeros((tb, stop), jnp.uint32).at[rows, pos].set(
+        u, mode="drop")
+    order = jax.lax.psum(order_l, axis_name)
+    vals = jax.lax.psum(vals_l, axis_name)
+    return vals, order, crs, crs + drains
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int):
+    fn = functools.partial(_colskip_tile_local, w=w, k=k, stop=stop,
+                           axis_name=axis_name)
+    sharded = shard_map(fn, mesh=mesh, in_specs=P(None, axis_name),
+                        out_specs=(P(), P(), P(), P()))
+    return jax.jit(sharded)
+
+
+def colskip_sort_mesh(x, mesh, *, w: int = 32, k: int = 2,
+                      axis_name: str = "banks",
+                      stop_after: int | None = None):
+    """Sort rows of ``x`` (B, N) uint32 over the mesh's ``axis_name`` banks.
+
+    Bit-identical to :func:`repro.kernels.colskip.colskip_sort_batched`
+    (values, order, and CR/cycle telemetry) — §V.C's invariance of column
+    skipping under multi-bank management, realized with collectives.  N must
+    divide evenly over the axis; callers fall back to one bank otherwise.
+    """
+    b, n = x.shape
+    nbanks = mesh.shape[axis_name]
+    if n % nbanks:
+        raise ValueError(f"N={n} not divisible over {nbanks} mesh banks")
+    stop = n if stop_after is None else min(int(stop_after), n)
+    if stop < 1:
+        raise ValueError(f"stop_after={stop_after} must be >= 1")
+    fn = _compiled_tile_fn(mesh, axis_name, w, k, stop)
+    return fn(jnp.asarray(x, jnp.uint32))
+
+
+class MeshBankPool(BankPool):
+    """A :class:`BankPool` whose shard groups execute on a jax device mesh.
+
+    Placement, readiness gating, the drain policy, and wave execution are
+    inherited unchanged — telemetry parity with the single-process pool is
+    structural.  What changes is *where* a shard group's mixed-column
+    judgement runs: the pool carries a one-axis device mesh, and the
+    ``colskip_mesh`` backend executes each tile through
+    :func:`colskip_sort_mesh` on it.  Logical banks and devices are distinct
+    resources: the pool may model more banks than there are devices (several
+    logical banks per device) — the §IV manager does not care, because the
+    cycle count is bank-count invariant.
+    """
+
+    def __init__(self, banks: int = 8, bank_width: int = 1024,
+                 bank_rows: int = 8, devices=None, axis_name: str = "banks"):
+        super().__init__(banks, bank_width, bank_rows)
+        self.axis_name = axis_name
+        self.mesh = make_bank_mesh(devices, axis_name)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.shape[self.axis_name]

@@ -32,14 +32,35 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sort_kernel(w: int, k: int, x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
-    u = x_ref[...].astype(jnp.uint32)        # (TB, N)
-    tb, n = u.shape
+def colskip_machine(u, w: int, k: int, stop: int, *,
+                    or_any=None, drain_counts=None):
+    """Batched §III state machine, parameterized over the bank gates.
+
+    ``u`` is one bank's (TB, N_local) column shard (the whole tile when run
+    monolithically).  The two multi-bank-manager combine points are
+    injectable so the same body serves both the single-bank Pallas kernel
+    and the mesh-sharded realization (:mod:`repro.dist.bankmesh`):
+
+      * ``or_any(bits)``   — OR per-row predicate stacks across banks
+        ((TB, P) bool -> (TB, P) bool); identity for one bank;
+      * ``drain_counts(m_local) -> (m_total, before)`` — global survivor
+        count plus this bank's exclusive bank-major prefix; ``(m, 0)`` for
+        one bank.
+
+    Returns ``(sorted_mask, out_pos, crs, drains)`` — local masks/positions
+    plus replicated telemetry; callers assemble values/order from them.
+    """
+    tb, n_loc = u.shape
     kk = max(1, k)
+    if or_any is None:
+        or_any = lambda bits: bits
+    if drain_counts is None:
+        drain_counts = lambda m: (m, jnp.zeros_like(m))
 
     def load(sorted_mask, t_sigs, t_masks, t_valid):
-        unsorted = ~sorted_mask                               # (TB, N)
-        live = t_valid & (t_masks & unsorted[:, None, :]).any(-1)   # (TB, kk)
+        unsorted = ~sorted_mask                               # (TB, Nl)
+        hit = (t_masks & unsorted[:, None, :]).any(-1)        # (TB, kk)
+        live = t_valid & or_any(hit)                          # SL gate
         exists = live.any(-1)                                 # (TB,)
         first = jnp.argmax(live, axis=-1)                     # (TB,)
         idx = jnp.arange(kk)[None, :]
@@ -59,10 +80,11 @@ def _sort_kernel(w: int, k: int, x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
             alive, sigs, masks, valid, s_top, seen, crs = carry
             sig = jnp.int32(w - 1 - j)
             active = sig <= start                              # (TB,)
-            col = ((u >> jnp.uint32(sig)) & 1).astype(bool)    # (TB, N)
-            any1 = (col & alive).any(-1)
-            any0 = (~col & alive).any(-1)
-            mixed = active & any1 & any0                       # (TB,)
+            col = ((u >> jnp.uint32(sig)) & 1).astype(bool)    # (TB, Nl)
+            # mixed-column judgement: both predicate bits through one gate
+            anyb = or_any(jnp.stack([(col & alive).any(-1),
+                                     (~col & alive).any(-1)], -1))
+            mixed = active & anyb[:, 0] & anyb[:, 1]           # (TB,)
             new_alive = jnp.where(mixed[:, None], alive & ~col, alive)
             rec = (mixed & fresh)[:, None] if k > 0 else jnp.zeros((tb, 1), bool)
             # push (sig, mask) entry: shift table toward older slots
@@ -84,7 +106,7 @@ def _sort_kernel(w: int, k: int, x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
 
     def body(i, st):
         sorted_mask, sigs, masks, valid, s_top, out_pos, count, crs, drains = st
-        done = count >= n                                      # (TB,)
+        done = count >= stop                                   # (TB,)
         alive, start, fresh, valid = load(sorted_mask, sigs, masks, valid)
         alive, sigs, masks, valid, s_top, crs2 = traverse(
             alive, start, fresh, sigs, masks, valid, s_top,
@@ -92,55 +114,74 @@ def _sort_kernel(w: int, k: int, x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
         # rows already finished must not mutate state or counters
         alive = jnp.where(done[:, None], jnp.zeros_like(alive), alive)
         crs = crs + jnp.where(done, 0, crs2)
-        m = alive.sum(-1).astype(jnp.int32)
-        rank = jnp.cumsum(alive, -1) - 1
-        out_pos = jnp.where(alive, count[:, None] + rank, out_pos)
-        return (sorted_mask | alive, sigs, masks, valid, s_top, out_pos,
-                count + m, crs, drains + jnp.maximum(m - 1, 0))
+        m_tot, before = drain_counts(alive.sum(-1).astype(jnp.int32))
+        # k-early-exit: drain only the still-needed duplicates (bank-major)
+        m_eff = jnp.minimum(m_tot, stop - count)
+        rank = before[:, None] + jnp.cumsum(alive, -1) - 1
+        keep = alive & (rank < m_eff[:, None])
+        out_pos = jnp.where(keep, count[:, None] + rank, out_pos)
+        return (sorted_mask | keep, sigs, masks, valid, s_top, out_pos,
+                count + m_eff, crs, drains + jnp.maximum(m_eff - 1, 0))
 
     st0 = (
-        jnp.zeros((tb, n), bool),                    # sorted_mask
+        jnp.zeros((tb, n_loc), bool),                # sorted_mask
         jnp.zeros((tb, kk), jnp.int32),              # table sigs
-        jnp.zeros((tb, kk, n), bool),                # table masks
+        jnp.zeros((tb, kk, n_loc), bool),            # table masks
         jnp.zeros((tb, kk), bool),                   # table valid
         jnp.full((tb,), w - 1, jnp.int32),           # s_top
-        jnp.zeros((tb, n), jnp.int32),               # out_pos
+        jnp.zeros((tb, n_loc), jnp.int32),           # out_pos
         jnp.zeros((tb,), jnp.int32),                 # count
         jnp.zeros((tb,), jnp.int32),                 # crs
         jnp.zeros((tb,), jnp.int32),                 # drains
     )
-    st = jax.lax.fori_loop(0, n, body, st0)
-    _, _, _, _, _, out_pos, _, crs, drains = st
-    order = jnp.zeros((tb, n), jnp.int32)
+    st = jax.lax.fori_loop(0, stop, body, st0)
+    sorted_mask, _, _, _, _, out_pos, _, crs, drains = st
+    return sorted_mask, out_pos, crs, drains
+
+
+def _sort_kernel(w: int, k: int, stop: int | None,
+                 x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
+    u = x_ref[...].astype(jnp.uint32)        # (TB, N)
+    tb, n = u.shape
+    stop = n if stop is None else min(stop, n)
+    sorted_mask, out_pos, crs, drains = colskip_machine(u, w, k, stop)
+    order = jnp.zeros((tb, stop), jnp.int32)
     rows = jnp.broadcast_to(jnp.arange(tb)[:, None], (tb, n))
     cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (tb, n))
-    order = order.at[rows, out_pos].set(cols)
+    # undrained rows scatter out of bounds and are dropped (early exit)
+    pos = jnp.where(sorted_mask, out_pos, stop)
+    order = order.at[rows, pos].set(cols, mode="drop")
     vals_ref[...] = jnp.take_along_axis(u, order, axis=1)
     order_ref[...] = order
     crs_ref[...] = crs[:, None]
     cyc_ref[...] = (crs + drains)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("w", "k", "tb", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("w", "k", "tb", "interpret", "stop_after"))
 def sort_pallas(x: jax.Array, w: int = 32, k: int = 2, tb: int = 4,
-                interpret: bool = True):
+                interpret: bool = True, stop_after: int | None = None):
     """Sort rows of ``x`` (B, N) uint32 ascending; returns
-    (values, order, column_reads, cycles) with per-row telemetry."""
+    (values, order, column_reads, cycles) with per-row telemetry.
+    ``stop_after`` is the per-row k-early-exit drain (outputs (B, stop))."""
     b, n = x.shape
+    stop = n if stop_after is None else min(int(stop_after), n)
+    if stop < 1:
+        raise ValueError(f"stop_after={stop_after} must be >= 1")
     bp = (b + tb - 1) // tb * tb
     if bp != b:
         x = jnp.pad(x, ((0, bp - b), (0, 0)))
     grid = (bp // tb,)
     vals, order, crs, cyc = pl.pallas_call(
-        functools.partial(_sort_kernel, w, k),
+        functools.partial(_sort_kernel, w, k, stop),
         grid=grid,
         in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        out_specs=[pl.BlockSpec((tb, stop), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, stop), lambda i: (i, 0)),
                    pl.BlockSpec((tb, 1), lambda i: (i, 0)),
                    pl.BlockSpec((tb, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((bp, n), jnp.uint32),
-                   jax.ShapeDtypeStruct((bp, n), jnp.int32),
+        out_shape=[jax.ShapeDtypeStruct((bp, stop), jnp.uint32),
+                   jax.ShapeDtypeStruct((bp, stop), jnp.int32),
                    jax.ShapeDtypeStruct((bp, 1), jnp.int32),
                    jax.ShapeDtypeStruct((bp, 1), jnp.int32)],
         interpret=interpret,

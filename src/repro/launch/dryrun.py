@@ -40,6 +40,14 @@ from .mesh import make_production_mesh
 from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms, collective_bytes
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize compiled.cost_analysis() — older jax returns [dict]."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
@@ -155,7 +163,7 @@ def _probe_cost(cfg, cell, mesh, n_layers, variant="base"):
                                     variant=variant)
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
-    return compiled.cost_analysis(), collective_bytes(compiled.as_text())["total"]
+    return _cost_analysis(compiled), collective_bytes(compiled.as_text())["total"]
 
 
 def _corrected_roofline(cfg, cell, mesh, n_chips, model_flops,
@@ -217,7 +225,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
                               donate_argnums=donate).lower(*args)
             compiled = lowered.compile()
         ma = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_analysis(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rl = roofline_terms(cost, hlo, n_chips,

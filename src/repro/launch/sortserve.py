@@ -73,6 +73,10 @@ def main(argv=None):
     ap.add_argument("--max_len", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backends", default="colskip,radix_topk,jaxsort,numpy")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve through the mesh-sharded bank pool "
+                         "(repro.dist.bankmesh): shard groups execute on jax "
+                         "devices, colskip tiles via the colskip_mesh backend")
     ap.add_argument("--tile_rows", type=int, default=8)
     ap.add_argument("--banks", type=int, default=8)
     ap.add_argument("--bank_width", type=int, default=1024)
@@ -80,13 +84,20 @@ def main(argv=None):
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     args = ap.parse_args(argv)
 
+    backends = tuple(s for s in args.backends.split(",") if s)
+    if args.mesh:
+        # the mesh-sharded simulator replaces the local one; §V.C cycle
+        # invariance keeps every telemetry assertion identical
+        backends = tuple("colskip_mesh" if b == "colskip" else b
+                         for b in backends)
     cfg = EngineConfig(
-        backends=tuple(s for s in args.backends.split(",") if s),
+        backends=backends,
         tile_rows=args.tile_rows,
         banks=args.banks,
         bank_width=args.bank_width,
         bank_rows=max(args.tile_rows, 8),
         sim_width_cap=args.sim_width_cap,
+        mesh=args.mesh,
     )
     engine = SortServeEngine(cfg)
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)

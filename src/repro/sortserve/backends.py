@@ -147,9 +147,9 @@ class NumpyBackend(Backend):
 class ColskipBackend(Backend):
     """Cycle-exact column-skipping sorter (§III hardware model, batched).
 
-    ``kmin`` runs the full sort and slices the first k outputs; the
-    simulated CR/cycle telemetry is therefore that of a *complete* sort (a
-    k-early-exit drain is a known follow-up, tracked in ROADMAP.md).
+    ``kmin`` runs the k-early-exit drain: the hardware model stops after the
+    tile's k minima have drained, so the simulated CR/cycle telemetry covers
+    only the executed iterations instead of a complete sort.
     """
 
     name = "colskip"
@@ -162,15 +162,64 @@ class ColskipBackend(Backend):
 
     def run(self, tile: Tile) -> TileResult:
         from repro.kernels.colskip import colskip_sort_batched
+        stop = tile.k if tile.op == "kmin" else None
         vals, order, crs, cycles = colskip_sort_batched(
-            tile.data, self.w, self.state_k, use_pallas=self.use_pallas)
+            tile.data, self.w, self.state_k, use_pallas=self.use_pallas,
+            stop_after=stop)
         vals = np.asarray(vals)
         order = np.asarray(order, dtype=np.int32)
-        if tile.op == "kmin":
-            vals, order = vals[:, :tile.k], order[:, :tile.k]
         return TileResult(vals, order,
                           np.asarray(crs, np.int64), np.asarray(cycles, np.int64),
-                          self.name, meta={"w": self.w, "state_k": self.state_k})
+                          self.name, meta={"w": self.w, "state_k": self.state_k,
+                                           "stop_after": stop})
+
+
+@register_backend
+class ShardedColskipBackend(Backend):
+    """Column-skipping sorter over a jax device mesh (§IV on real devices).
+
+    Executes each tile through :func:`repro.dist.bankmesh.colskip_sort_mesh`:
+    columns sharded over the mesh's bank axis, mixed-column judgement as one
+    ``psum`` per bit plane.  Values, order, and CR/cycle telemetry are
+    bit-identical to :class:`ColskipBackend` — §V.C's invariance of column
+    skipping under multi-bank management — so the cost policy treats both
+    simulators interchangeably.  Tiles whose width does not divide over the
+    mesh run on one bank (same telemetry, by the same invariance).
+    """
+
+    name = "colskip_mesh"
+    ops = frozenset(("sort", "argsort", "kmin"))
+
+    def __init__(self, w: int = 32, state_k: int = 2, mesh=None,
+                 axis_name: str = "banks"):
+        from repro.dist.bankmesh import make_bank_mesh
+        self.w = w
+        self.state_k = state_k
+        self.axis_name = axis_name
+        self.mesh = mesh if mesh is not None else make_bank_mesh(
+            axis_name=axis_name)
+
+    def run(self, tile: Tile) -> TileResult:
+        from repro.dist.bankmesh import colskip_sort_mesh
+        from repro.kernels.colskip import colskip_sort_batched
+        n = tile.data.shape[1]
+        n_dev = self.mesh.shape[self.axis_name]
+        stop = tile.k if tile.op == "kmin" else None
+        if n % n_dev == 0 and n_dev > 1:
+            vals, order, crs, cycles = colskip_sort_mesh(
+                tile.data, self.mesh, w=self.w, k=self.state_k,
+                axis_name=self.axis_name, stop_after=stop)
+            banks_used = n_dev
+        else:
+            vals, order, crs, cycles = colskip_sort_batched(
+                tile.data, self.w, self.state_k, use_pallas=False,
+                stop_after=stop)
+            banks_used = 1
+        return TileResult(np.asarray(vals), np.asarray(order, np.int32),
+                          np.asarray(crs, np.int64),
+                          np.asarray(cycles, np.int64), self.name,
+                          meta={"w": self.w, "state_k": self.state_k,
+                                "stop_after": stop, "mesh_banks": banks_used})
 
 
 @register_backend
@@ -296,8 +345,12 @@ class CostPolicy:
                     if b.name == "radix_topk":
                         return b
         by_name = {b.name: b for b in cands}
-        if "colskip" in by_name and n <= self.sim_width_cap:
-            return by_name["colskip"]     # cycle-exact simulation, affordable
+        # both cycle-exact simulators (local and mesh-sharded) rank the same:
+        # §V.C — bank management never changes the modeled latency
+        sim = next((by_name[nm] for nm in ("colskip", "colskip_mesh")
+                    if nm in by_name), None)
+        if sim is not None and n <= self.sim_width_cap:
+            return sim                    # cycle-exact simulation, affordable
         # past the cap: any non-simulating backend before the O(N*w)-per-
         # output simulator, which is only a last resort
         for name in ("jaxsort", "numpy"):

@@ -27,7 +27,9 @@ import json
 import queue
 import threading
 import time
-from collections import deque
+import dataclasses
+import hashlib
+from collections import OrderedDict, deque
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 
@@ -53,6 +55,8 @@ class EngineConfig:
     state_k: int = 2                # colskip state-recording entries
     sim_width_cap: int = 2048       # widest row the cycle-exact sim serves
     verify: bool = False            # cross-check every response vs the oracle
+    mesh: bool = False              # MeshBankPool: shard groups on devices
+    cache_size: int = 1024          # result-cache entries (0 disables)
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -71,20 +75,31 @@ class SortServeEngine:
         # w/state_k are owned by EngineConfig (the CostPolicy and telemetry
         # are computed from them); a conflicting per-backend override would
         # silently desync simulated cycles from the modeled hardware
-        clash = {"w", "state_k"} & set(kwargs.get("colskip", {}))
-        if clash:
-            raise ValueError(
-                f"set {sorted(clash)} via EngineConfig, not backend_kwargs['colskip']")
-        kwargs["colskip"] = {**kwargs.get("colskip", {}),
-                             "w": self.config.w, "state_k": self.config.state_k}
+        for sim in ("colskip", "colskip_mesh"):
+            clash = {"w", "state_k"} & set(kwargs.get(sim, {}))
+            if clash:
+                raise ValueError(
+                    f"set {sorted(clash)} via EngineConfig, "
+                    f"not backend_kwargs[{sim!r}]")
+            kwargs[sim] = {**kwargs.get(sim, {}),
+                           "w": self.config.w, "state_k": self.config.state_k}
+        if self.config.mesh:
+            from repro.dist.bankmesh import MeshBankPool
+            self.pool = MeshBankPool(self.config.banks, self.config.bank_width,
+                                     self.config.bank_rows)
+            # the mesh backend executes on the pool's own device mesh
+            kwargs["colskip_mesh"].setdefault("mesh", self.pool.mesh)
+            kwargs["colskip_mesh"].setdefault("axis_name", self.pool.axis_name)
+        else:
+            self.pool = BankPool(self.config.banks, self.config.bank_width,
+                                 self.config.bank_rows)
         self.backends = resolve_backends(self.config.backends, **kwargs)
         self.policy = CostPolicy(self.backends,
                                  sim_width_cap=self.config.sim_width_cap,
                                  w=self.config.w)
         self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
-        self.pool = BankPool(self.config.banks, self.config.bank_width,
-                             self.config.bank_rows)
         self.scheduler = Scheduler(self.pool)
+        self._cache: OrderedDict = OrderedDict()
         # bounded window for percentiles + running totals for all-time mean,
         # so a long-lived service does not accumulate one float per request
         self._latencies: deque = deque(maxlen=4096)
@@ -93,8 +108,31 @@ class SortServeEngine:
         self._agg = {
             "requests": 0, "column_reads": 0, "cycles_exact": 0,
             "cycles_estimated": 0.0, "verify_failures": 0,
+            "cache_hits": 0, "cache_misses": 0,
             "per_backend": {}, "modeled_hw": {},
         }
+
+    # -------------------------------------------------------------- cache
+    @staticmethod
+    def _cache_key(req: SortRequest) -> tuple:
+        """Result-cache identity: everything that determines the response
+        except the request id — payload bytes, dtype, op, k, routing hint
+        (hinted and policy-routed results must never cross)."""
+        digest = hashlib.blake2b(np.ascontiguousarray(req.payload).tobytes(),
+                                 digest_size=16).digest()
+        return (req.op, req.k, req.backend, str(req.payload.dtype), req.n,
+                digest)
+
+    @staticmethod
+    def _isolated_response(resp: SortResponse, **over) -> SortResponse:
+        """Copy with private arrays — cache entries and served hits must not
+        alias arrays a caller may mutate in place."""
+        meta = over.pop("meta", None)
+        return dataclasses.replace(
+            resp,
+            values=None if resp.values is None else resp.values.copy(),
+            indices=None if resp.indices is None else resp.indices.copy(),
+            meta=dict(resp.meta) if meta is None else meta, **over)
 
     # ------------------------------------------------------------------ core
     def submit(self, requests: list[SortRequest]) -> list[SortResponse]:
@@ -121,7 +159,21 @@ class SortServeEngine:
                 raise ValueError(
                     f"request {req.request_id}: no enabled backend serves "
                     f"op {req.op!r}; have {sorted(self.policy.by_name)}")
+        # result cache: requests whose (payload, op, k, hint) was served
+        # before skip batching/execution entirely and are answered from the
+        # memo at the end (hit/miss counters only commit on success)
+        use_cache = self.config.cache_size > 0
+        hits: dict[int, SortResponse] = {}
+        misses: list[tuple[SortRequest, tuple | None]] = []
         for req in requests:
+            key = self._cache_key(req) if use_cache else None
+            entry = self._cache.get(key) if use_cache else None
+            if entry is not None:
+                self._cache.move_to_end(key)
+                hits[req.request_id] = entry
+            else:
+                misses.append((req, key))
+        for req, _ in misses:
             self.batcher.add(req)
         # all telemetry rolls back if the batch fails mid-flight, so a
         # partial execution never inflates counters relative to `requests`
@@ -146,6 +198,24 @@ class SortServeEngine:
         for tile, result in served:
             for resp in self._scatter(tile, result, t1 - t0):
                 by_id[resp.request_id] = resp
+        if use_cache:
+            key_by_id = {req.request_id: key for req, key in misses}
+            for rid, resp in by_id.items():
+                # a response that failed oracle verification must not be
+                # replayed from the memo (hits skip the verify path)
+                if not resp.meta.get("verify_failed"):
+                    self._cache[key_by_id[rid]] = self._isolated_response(resp)
+            while len(self._cache) > self.config.cache_size:
+                self._cache.popitem(last=False)          # evict LRU
+        for req in requests:
+            entry = hits.get(req.request_id)
+            if entry is not None:
+                by_id[req.request_id] = self._isolated_response(
+                    entry, request_id=req.request_id, latency_s=t1 - t0,
+                    meta={**entry.meta, "cache_hit": True})
+        if use_cache:
+            self._agg["cache_hits"] += len(hits)
+            self._agg["cache_misses"] += len(misses)
         self._agg["requests"] += len(requests)
         self._latencies.extend([t1 - t0] * len(requests))
         self._lat_sum += (t1 - t0) * len(requests)
@@ -183,6 +253,7 @@ class SortServeEngine:
             vals_u = np.asarray(result.values[row, :out])
             idxs = (np.asarray(result.indices[row, :out], np.int32)
                     if result.indices is not None else None)
+            meta = {"pad_cols": tile.shape[1] - req.n}
             if self.config.verify:
                 ref_v, ref_i = solve_numpy(
                     req.op, tile.data[row, :], req.k)
@@ -191,6 +262,7 @@ class SortServeEngine:
                     ok = idxs is not None and np.array_equal(idxs, ref_i[:out])
                 if not ok:
                     self._agg["verify_failures"] += 1
+                    meta["verify_failed"] = True   # also bars it from cache
             yield SortResponse(
                 request_id=req.request_id,
                 op=req.op,
@@ -204,13 +276,16 @@ class SortServeEngine:
                               if result.column_reads is not None else None),
                 cycles=(int(result.cycles[row])
                         if result.cycles is not None else None),
-                meta={"pad_cols": tile.shape[1] - req.n},
+                meta=meta,
             )
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> dict:
         lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
         bs = self.batcher.stats
+        cache_hit_rate = (self._agg["cache_hits"] /
+                          max(1, self._agg["cache_hits"] +
+                              self._agg["cache_misses"]))
         return {
             "requests": self._agg["requests"],
             "latency_s": {          # mean is all-time; quantiles are windowed
@@ -226,12 +301,22 @@ class SortServeEngine:
             "verify_failures": self._agg["verify_failures"],
             # copies: exported telemetry must not alias internal counters
             "per_backend": copy.deepcopy(self._agg["per_backend"]),
+            "cache": {
+                "hits": self._agg["cache_hits"],
+                "misses": self._agg["cache_misses"],
+                "hit_rate": cache_hit_rate,
+                "size": len(self._cache),
+                "capacity": self.config.cache_size,
+            },
             "batcher": {
                 "tiles": bs.tiles,
                 "requests": bs.requests,
                 "pad_rows": bs.pad_rows,
                 "pad_col_frac": bs.pad_col_frac,
                 "bucket_hit_rate": bs.hit_rate,
+                # result-cache hit rate lives next to the bucket hit rate:
+                # both measure how much of the stream re-used earlier work
+                "cache_hit_rate": cache_hit_rate,
                 "distinct_signatures": len(bs.signatures),
             },
             "scheduler": self.scheduler.telemetry(),

@@ -1,0 +1,106 @@
+"""MeshBankPool / colskip_mesh: telemetry parity with the single-process pool.
+
+§V.C's claim — multi-bank management changes organization, never cycles —
+must survive the trip onto a device mesh.  The in-process tests run on the
+session's single device (mesh of one bank); the subprocess test re-runs the
+whole comparison on a real 4-device host-platform mesh.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+pytest.importorskip("repro.dist.bankmesh",
+                    reason="repro.dist not present in this tree")
+
+from repro.core import make_dataset, multibank_colskip_sort
+from repro.dist.bankmesh import MeshBankPool
+from repro.launch.sortserve import check_against_oracle, make_workload
+from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
+
+
+_PARITY_BODY = """
+    import numpy as np
+    from repro.core import make_dataset, multibank_colskip_sort
+    from repro.launch.sortserve import check_against_oracle, make_workload
+    from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
+
+    def engines():
+        geo = dict(tile_rows=4, min_bucket=8, banks=4, bank_width=64,
+                   bank_rows=4, sim_width_cap=4096, cache_size=0)
+        local = SortServeEngine(EngineConfig(
+            backends=("colskip",), **geo))
+        mesh = SortServeEngine(EngineConfig(
+            backends=("colskip_mesh",), mesh=True, **geo))
+        return local, mesh
+
+    # the multibank regression case from tests/test_sortserve.py, served as
+    # requests: §V.C says every backend realization reports the same cycles
+    local, mesh = engines()
+    for dataset in ("uniform", "mapreduce"):
+        v = make_dataset(dataset, 128, 32, seed=13).astype(np.uint32)
+        mono = multibank_colskip_sort(v.astype(np.uint64), 32, 2, banks=4)
+        rl = local.submit([SortRequest("sort", v.copy())])[0]
+        rm = mesh.submit([SortRequest("sort", v.copy())])[0]
+        assert rl.cycles == rm.cycles == mono.cycles, (dataset, rl.cycles,
+                                                       rm.cycles, mono.cycles)
+        assert rl.column_reads == rm.column_reads == mono.column_reads
+        assert np.array_equal(rl.values, rm.values)
+
+    # a mixed stream: responses bit-identical, scheduler telemetry equal
+    local, mesh = engines()
+    reqs = make_workload(24, min_len=8, max_len=128, seed=42,
+                         ops=("sort", "argsort", "kmin"))
+    resp_l = local.submit([SortRequest(q.op, q.payload.copy(), k=q.k)
+                           for q in reqs])
+    resp_m = mesh.submit([SortRequest(q.op, q.payload.copy(), k=q.k)
+                          for q in reqs])
+    for q, a, b in zip(reqs, resp_l, resp_m):
+        assert a.cycles == b.cycles and a.column_reads == b.column_reads
+        if a.values is not None:
+            assert np.array_equal(a.values, b.values)
+        if a.indices is not None:
+            assert np.array_equal(a.indices, b.indices)
+        assert check_against_oracle(q, b), (q.op, q.n)
+    tl, tm = local.telemetry(), mesh.telemetry()
+    assert tl["cycles_exact"] == tm["cycles_exact"]
+    assert tl["column_reads"] == tm["column_reads"]
+    assert tl["scheduler"] == tm["scheduler"]      # drains, waves, per-bank
+    print("OK")
+"""
+
+
+def test_mesh_pool_parity_in_process():
+    """Single-device mesh (this session): full telemetry parity."""
+    env = {}
+    exec(compile(textwrap.dedent(_PARITY_BODY), "<parity>", "exec"), env)
+
+
+def test_mesh_pool_parity_on_4_devices():
+    """Same comparison with shard groups on a real 4-device mesh."""
+    code = ('import os\n'
+            'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"\n'
+            'import sys; sys.path.insert(0, "src")\n') + textwrap.dedent(_PARITY_BODY)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+def test_mesh_pool_geometry_and_kmin_early_exit():
+    """MeshBankPool keeps BankPool bookkeeping; kmin telemetry is shorter."""
+    pool = MeshBankPool(banks=4, bank_width=64, bank_rows=4)
+    assert pool.shards_for(100) == 2
+    assert pool.n_devices >= 1
+
+    v = make_dataset("mapreduce", 64, 32, seed=3).astype(np.uint32)
+    eng = SortServeEngine(EngineConfig(
+        backends=("colskip_mesh",), mesh=True, tile_rows=1, bank_rows=1,
+        banks=4, bank_width=64, sim_width_cap=4096, cache_size=0))
+    full = eng.submit([SortRequest("sort", v.copy())])[0]
+    kmin = eng.submit([SortRequest("kmin", v.copy(), k=4)])[0]
+    assert kmin.cycles < full.cycles          # k-early-exit drain
+    assert check_against_oracle(SortRequest("kmin", v.copy(), k=4), kmin)

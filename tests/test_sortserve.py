@@ -380,6 +380,109 @@ def test_telemetry_json_roundtrip(tmp_path):
     assert len(loaded["scheduler"]["banks"]) == 4
 
 
+# -------------------------------------------------------- kmin early exit
+def test_kmin_early_exit_cycle_regression():
+    """The colskip hardware model stops after k drains: kmin telemetry is
+    cycle-exact against the numpy model run with stop_after, and strictly
+    cheaper than the full sort for small k (ROADMAP follow-up)."""
+    engine = small_engine(tile_rows=1, bank_rows=1, sim_width_cap=4096,
+                          backends=("colskip",))
+    for n in (32, 128):
+        v = make_dataset("mapreduce", n, 32, seed=3)
+        payload = v.astype(np.uint32)
+        full = engine.submit([SortRequest("sort", payload.copy())])[0]
+        for k in (1, 2, 8):
+            resp = engine.submit([SortRequest("kmin", payload.copy(), k=k)])[0]
+            k_pad = pow2_bucket(k, 1)          # the tile's static drain count
+            hw = colskip_sort(v, w=32, k=2, stop_after=k_pad)
+            assert resp.backend == "colskip"
+            assert resp.cycles == hw.cycles
+            assert resp.column_reads == hw.column_reads
+            assert resp.cycles < full.cycles
+            assert np.array_equal(resp.values,
+                                  np.sort(payload, kind="stable")[:k])
+    # duplicates: the partial final drain is billed one stall per extra row
+    dup = np.zeros(16, np.uint64)
+    r_full = colskip_sort(dup, w=32, k=2)
+    r_two = colskip_sort(dup, w=32, k=2, stop_after=2)
+    assert r_full.cycles - r_full.drains == r_two.cycles - r_two.drains
+    assert r_two.drains == 1 and r_full.drains == 15
+
+
+# ------------------------------------------------------------ result cache
+def test_result_cache_hit_serves_identical_response():
+    engine = small_engine()
+    payload = np.arange(64, dtype=np.uint32)[::-1].copy()
+    first = engine.submit([SortRequest("sort", payload.copy())])[0]
+    again = engine.submit([SortRequest("sort", payload.copy())])[0]
+    assert np.array_equal(first.values, again.values)
+    assert again.backend == first.backend
+    assert again.cycles == first.cycles          # telemetry rides along
+    assert again.meta.get("cache_hit") is True
+    telem = engine.telemetry()
+    assert telem["cache"]["hits"] == 1
+    assert telem["cache"]["misses"] == 1
+    assert telem["batcher"]["cache_hit_rate"] == 0.5
+    # a hit executes nothing: scheduler tile count unchanged by the re-ask
+    assert telem["scheduler"]["tiles"] == 1
+
+
+def test_result_cache_key_separates_op_k_and_hint():
+    engine = small_engine()
+    payload = np.arange(32, dtype=np.uint32)
+    r_sort = engine.submit([SortRequest("sort", payload.copy())])[0]
+    r_kmin = engine.submit([SortRequest("kmin", payload.copy(), k=4)])[0]
+    r_hint = engine.submit([SortRequest("sort", payload.copy(),
+                                        backend="numpy")])[0]
+    assert engine.telemetry()["cache"]["hits"] == 0      # all distinct keys
+    assert r_hint.backend == "numpy"
+    assert r_sort.backend == "colskip"
+    assert len(r_kmin.values) == 4
+
+
+def test_result_cache_lru_eviction_and_disable():
+    engine = small_engine(cache_size=2)
+    reqs = [SortRequest("sort", np.full(8, i, np.uint32)) for i in range(4)]
+    engine.submit(reqs)
+    assert engine.telemetry()["cache"]["size"] == 2      # capacity bound
+    off = small_engine(cache_size=0)
+    payload = np.arange(16, dtype=np.uint32)
+    off.submit([SortRequest("sort", payload.copy())])
+    off.submit([SortRequest("sort", payload.copy())])
+    t = off.telemetry()
+    assert t["cache"] == {"hits": 0, "misses": 0, "hit_rate": 0.0,
+                          "size": 0, "capacity": 0}
+
+
+def test_result_cache_not_poisoned_by_caller_mutation():
+    """Responses never alias cache entries: in-place edits stay private.
+
+    (Uses the numpy backend — jax-backed backends already hand out read-only
+    views, but oracle results are plain writable arrays.)"""
+    engine = small_engine()
+    payload = np.arange(32, dtype=np.uint32)[::-1].copy()
+    req = lambda: SortRequest("sort", payload.copy(), backend="numpy")
+    first = engine.submit([req()])[0]
+    first.values[:] = 0                        # hostile caller
+    second = engine.submit([req()])[0]
+    assert second.meta.get("cache_hit") is True
+    assert np.array_equal(second.values, np.sort(payload))
+    second.values[:] = 7                       # hit responses are private too
+    third = engine.submit([req()])[0]
+    assert np.array_equal(third.values, np.sort(payload))
+
+
+def test_result_cache_not_poisoned_by_failed_batch():
+    engine = small_engine()
+    payload = np.arange(16, dtype=np.uint32)
+    engine.policy.by_name["numpy"].run = None            # poison execution
+    with pytest.raises(TypeError):
+        engine.submit([SortRequest("sort", payload.copy(), backend="numpy")])
+    t = engine.telemetry()
+    assert t["cache"]["hits"] == 0 and t["cache"]["misses"] == 0
+    assert t["cache"]["size"] == 0
+
+
 # ------------------------------------------------------------- properties
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 999), n_req=st.integers(1, 12))
