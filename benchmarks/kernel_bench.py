@@ -87,3 +87,20 @@ def run(report):
                      f"speedup={32 / (float(np.asarray(cyc).mean()) / 128):.2f}x "
                      + ("PASS" if sorted_ok else "MISS")),
         )
+
+    # --- colskip kernel: lane-packed vs dense mask carriers --------------
+    # same Pallas (interpret) kernel body, packed vs dense §III machine;
+    # telemetry must agree bit-exactly while the packed path runs faster
+    # (the headline 1024-wide numbers live in benchmarks/packed_bench.py)
+    v = np.stack([make_dataset("mapreduce", 128, 32, seed=s).astype(np.uint32)
+                  for s in (1, 2)])
+    vj = jnp.asarray(v)
+    (out_p), us_p = _timed(lambda a: colskip_sort_batched(
+        a, 32, 2, use_pallas=True, interpret=True, packed=True), vj)
+    (out_d), us_d = _timed(lambda a: colskip_sort_batched(
+        a, 32, 2, use_pallas=True, interpret=True, packed=False), vj)
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(out_p, out_d))
+    report(name="kernel/colskip_sort/packed_vs_dense", us_per_call=us_p,
+           derived=(f"dense_us={us_d:.0f} speedup={us_d / max(us_p, 1e-9):.2f}x "
+                    + ("PASS" if same else "MISS")))

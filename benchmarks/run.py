@@ -22,6 +22,7 @@ SUITES = [
     "benchmarks.serving_bench",
     "benchmarks.sortserve_bench",
     "benchmarks.distserve_bench",
+    "benchmarks.packed_bench",
 ]
 
 
@@ -30,6 +31,9 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated suite substrings")
     ap.add_argument("--json", action="store_true",
                     help="emit a JSON array of rows instead of CSV")
+    ap.add_argument("--out", default="",
+                    help="also write the JSON document to this file "
+                         "(e.g. BENCH_3.json; implies structured output)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
@@ -55,13 +59,20 @@ def main() -> None:
                 print(f"{mod_name},0.0,ERROR {e!r}", flush=True)
 
     n_miss = sum(1 for _, _, d in rows if "MISS" in d)
+    doc = {
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in rows],
+        "band_misses": n_miss,
+        "errors": [{"suite": s, "error": e} for s, e in failures],
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
     if args.json:
-        print(json.dumps({
-            "rows": [{"name": n, "us_per_call": u, "derived": d}
-                     for n, u, d in rows],
-            "band_misses": n_miss,
-            "errors": [{"suite": s, "error": e} for s, e in failures],
-        }, indent=2))
+        print(json.dumps(doc, indent=2))
+    elif args.out:
+        print(f"# wrote {len(rows)} rows -> {args.out}")
     else:
         print(f"# {len(rows)} rows, {n_miss} band misses, {len(failures)} suite errors")
     if failures:

@@ -75,3 +75,26 @@ def run(report):
                  f"cyc={telem['cycles_exact']} "
                  + ("PASS" if len(telem["per_backend"]) >= 2 else "MISS")),
     )
+
+    # cold vs warm: the same engine serving the same signatures twice —
+    # pass 2 runs entirely on executor-cache hits (no tracing/lowering)
+    from repro.sortserve.backends import EXECUTOR_CACHE
+    EXECUTOR_CACHE.clear()
+    engine = SortServeEngine(EngineConfig(
+        backends=("colskip",), tile_rows=8, banks=8, bank_width=256,
+        sim_width_cap=512, cache_size=0))
+    t0 = time.perf_counter()
+    engine.submit(_workload(rng, 32, "sort"))
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.submit(_workload(rng, 32, "sort"))
+    warm = time.perf_counter() - t0
+    ec = engine.telemetry()["executor_cache"]
+    report(
+        name="sortserve/colskip_cold_vs_warm_b32",
+        us_per_call=warm * 1e6 / 32,
+        derived=(f"cold_us={cold * 1e6 / 32:.0f} "
+                 f"warm_speedup={cold / warm:.1f}x "
+                 f"exec_hit_rate={ec['hit_rate']:.2f} "
+                 + ("PASS" if ec["hits"] > 0 else "MISS")),
+    )

@@ -10,7 +10,13 @@ Layers:
 
 from .baseline18 import SortResult, baseline_sort
 from .colskip import colskip_sort
-from .costmodel import baseline_cost, colskip_cost, fmax_mhz, merge_cost
+from .costmodel import (
+    baseline_cost,
+    colskip_cost,
+    estimate_colskip_cycles,
+    fmax_mhz,
+    merge_cost,
+)
 from .datasets import DATASETS, make_dataset
 from .jaxsort import colskip_sort_jax
 from .multibank import multibank_colskip_sort
@@ -20,5 +26,5 @@ __all__ = [
     "SortResult", "baseline_sort", "colskip_sort", "multibank_colskip_sort",
     "colskip_sort_jax", "topk", "topk_mask", "to_sortable_uint",
     "baseline_cost", "colskip_cost", "merge_cost", "fmax_mhz",
-    "make_dataset", "DATASETS",
+    "estimate_colskip_cycles", "make_dataset", "DATASETS",
 ]

@@ -11,13 +11,133 @@ for the two near-memory primitives:
 
 The simulator in :mod:`repro.core.colskip` drives these primitives and counts
 cycles exactly the way the paper does (CR-dominated accounting).
+
+Packed substrate
+----------------
+
+The dense ``(…, N)`` boolean masks the simulators carry are an 8x (vs 1-bit)
+over-representation of what they encode.  The packed helpers below store the
+same masks as ``(…, ceil(N/32))`` uint32 *lanes* — one word = 32 memristor
+cells, the software analogue of a 1T1R column read returning a machine word:
+
+  * :func:`pack_rows` / :func:`unpack_rows` — ``(…, N) bool`` <-> lanes;
+    element ``j`` lives in bit ``j % 32`` (LSB-first) of word ``j // 32`` and
+    tail padding is always zero, so bitwise AND/OR/ANDNOT on packed words are
+    exactly set operations on the masks.
+  * :func:`popcount` — per-word set-bit count (SWAR for numpy, native
+    ``lax.population_count`` under jax) — survivor counting without unpack.
+  * :func:`any_lane` — OR-reduction over the word axis (the sense-amp "saw a
+    bit" predicate).
+  * :func:`cumsum_bits` — per-element inclusive rank of the set bits (the
+    row-drain rank), expanded dense because its consumer (``out_pos``) is.
+
+Every helper accepts numpy arrays *and* jax arrays/tracers (dispatch on the
+input type), so the same code backs the numpy hardware model, the jitted
+engines, and the Pallas kernel body.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["BitMatrix", "to_bits", "from_bits"]
+__all__ = [
+    "BitMatrix",
+    "LANE",
+    "any_lane",
+    "cumsum_bits",
+    "from_bits",
+    "pack_planes",
+    "pack_rows",
+    "packed_words",
+    "popcount",
+    "tail_mask",
+    "to_bits",
+    "unpack_rows",
+]
+
+LANE = 32                      # bits per packed word (one uint32 column read)
+
+
+def _xp(a):
+    """numpy for ndarrays, jax.numpy for jax arrays and tracers."""
+    if isinstance(a, np.ndarray):
+        return np
+    import jax.numpy as jnp
+    return jnp
+
+
+def packed_words(n: int) -> int:
+    """Words needed to hold ``n`` mask bits."""
+    return -(-int(n) // LANE)
+
+
+def pack_rows(bits):
+    """``(…, N) bool`` -> ``(…, ceil(N/32)) uint32``; tail bits are zero."""
+    xp = _xp(bits)
+    n = bits.shape[-1]
+    nw = packed_words(n)
+    b = bits.astype(xp.uint32)
+    if nw * LANE != n:
+        pad = [(0, 0)] * (b.ndim - 1) + [(0, nw * LANE - n)]
+        b = xp.pad(b, pad)
+    b = b.reshape(b.shape[:-1] + (nw, LANE))
+    shifts = xp.arange(LANE, dtype=xp.uint32)
+    return (b << shifts).sum(axis=-1).astype(xp.uint32)
+
+
+def unpack_rows(words, n: int):
+    """Inverse of :func:`pack_rows` — ``(…, W) uint32`` -> ``(…, n) bool``."""
+    xp = _xp(words)
+    shifts = xp.arange(LANE, dtype=xp.uint32)
+    bits = (words[..., None] >> shifts) & xp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (words.shape[-1] * LANE,))[
+        ..., :n].astype(bool)
+
+
+def pack_planes(u, w: int):
+    """Pre-pack a value array's bit planes: ``(…, N) uint -> (w, …, W)``.
+
+    ``planes[sig]`` holds column ``sig``'s bits for every element, packed 32
+    per word — computed once so each traverse step's column read (CR) is a
+    word fetch instead of a full-width shift.  The single definition of the
+    plane layout shared by every packed machine realization."""
+    xp = _xp(u)
+    sigs = xp.arange(w, dtype=xp.uint32).reshape((w,) + (1,) * u.ndim)
+    return pack_rows(((u[None] >> sigs) & xp.uint32(1)).astype(bool))
+
+
+def tail_mask(n: int, xp=np):
+    """``(ceil(n/32),) uint32`` with exactly the ``n`` valid bits set."""
+    return pack_rows(xp.ones((n,), bool))
+
+
+def popcount(words):
+    """Per-word set-bit count, ``uint32 -> int32`` (shape-preserving)."""
+    xp = _xp(words)
+    if xp is not np:
+        import jax
+        return jax.lax.population_count(words).astype(xp.int32)
+    x = words.astype(np.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int32)
+
+
+def any_lane(words):
+    """OR-reduce the trailing word axis: True where any mask bit is set."""
+    xp = _xp(words)
+    return xp.any(words != 0, axis=-1)
+
+
+def cumsum_bits(words, n: int):
+    """Inclusive per-element rank of the set bits: ``(…, W) -> (…, n) int32``.
+
+    ``out[..., j] = sum(bit_0 … bit_j)`` — element ``j``'s 1-based drain rank
+    when its own bit is set.  Dense on purpose: the only consumer is the
+    dense ``out_pos`` scatter."""
+    xp = _xp(words)
+    return xp.cumsum(unpack_rows(words, n).astype(xp.int32), axis=-1)
 
 
 def to_bits(values: np.ndarray, w: int) -> np.ndarray:

@@ -33,10 +33,23 @@ __all__ = [
     "colskip_cost",
     "baseline_cost",
     "merge_cost",
+    "estimate_colskip_cycles",
     "fmax_mhz",
     "AREA_COEF",
     "POWER_COEF",
+    "COLSKIP_SPEEDUP_ANCHOR",
 ]
+
+# Paper Fig. 6/8a anchor: k=2 column skipping reaches 4.08x over the
+# baseline's w cycles/number on MapReduce-like data.  This is THE a-priori
+# cycle anchor — serving-policy estimates and the paper-figure benchmarks
+# both read it from here so they can never disagree.
+COLSKIP_SPEEDUP_ANCHOR = 4.08
+
+
+def estimate_colskip_cycles(n: int, w: int = 32) -> float:
+    """A-priori CR-cycle estimate for column-skip sorting ``n`` numbers."""
+    return n * w / COLSKIP_SPEEDUP_ANCHOR
 
 # --- calibrated coefficients (area: Kum^2, power: mW) -----------------------
 # Exact solutions of the Fig. 8 anchor system; per-bank fixed terms chosen

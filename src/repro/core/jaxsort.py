@@ -8,6 +8,15 @@ near-memory state controller.
 
 This is the form the framework actually jits/vmaps; it is also the oracle the
 Pallas kernel (:mod:`repro.kernels.colskip`) is tested against.
+
+The default hot path is **lane-packed** (``packed=True``): the alive mask,
+the sorted mask, and the k-entry table masks travel as ``ceil(N/32)`` uint32
+words (:mod:`repro.core.bitmatrix`) and the w bit planes are pre-packed once,
+so each traverse step reads one word row instead of shifting the whole value
+vector — the software analogue of a 1T1R column read returning 32 cells per
+word.  ``packed=False`` keeps the dense boolean machine as the equivalence
+baseline; both are bit-identical in values, order, CR, and cycles
+(property-tested).
 """
 
 from __future__ import annotations
@@ -18,13 +27,23 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .bitmatrix import (
+    any_lane,
+    cumsum_bits,
+    pack_planes,
+    pack_rows,
+    popcount,
+    tail_mask,
+    unpack_rows,
+)
+
 __all__ = ["colskip_sort_jax"]
 
 
 class _State(NamedTuple):
-    sorted_mask: jax.Array    # (N,) bool
+    sorted_mask: jax.Array    # (N,) bool | (W,) uint32 — retired rows
     table_sigs: jax.Array     # (k,) int32, most-recent-first
-    table_masks: jax.Array    # (k, N) bool
+    table_masks: jax.Array    # (k, N) bool | (k, W) uint32
     table_valid: jax.Array    # (k,) bool
     s_top: jax.Array          # () int32
     out_pos: jax.Array        # (N,) int32 — sorted position of each row
@@ -33,15 +52,16 @@ class _State(NamedTuple):
     drains: jax.Array         # () int32
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2,
-                     stop_after: int | None = None):
+                     stop_after: int | None = None, packed: bool = True):
     """Sort ``values`` (uint32 (N,)) ascending with the column-skipping HW model.
 
     Returns ``(sorted_values, order, column_reads, cycles)``.  With
     ``stop_after=k'`` the machine exits after draining the first ``k'``
     minima (k-early-exit serving mode): outputs have length ``k'`` and the
-    cycle count covers only the executed iterations.
+    cycle count covers only the executed iterations.  ``packed`` selects the
+    lane-packed mask carrier (default) vs the dense boolean baseline.
     """
     values = values.astype(jnp.uint32)
     n = values.shape[0]
@@ -49,6 +69,102 @@ def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2,
     if stop < 1:
         raise ValueError(f"stop_after={stop_after} must be >= 1")
     karr = max(1, k)
+
+    if packed:
+        st = _run_packed(values, n, w, karr, k, stop)
+    else:
+        st = _run_dense(values, n, w, karr, k, stop)
+    # undrained rows scatter out of bounds and are dropped
+    if packed:
+        sorted_bool = unpack_rows(st.sorted_mask, n)
+    else:
+        sorted_bool = st.sorted_mask
+    pos = jnp.where(sorted_bool, st.out_pos, stop)
+    order = jnp.zeros((stop,), jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return values[order], order, st.crs, st.crs + st.drains
+
+
+def _run_packed(values, n: int, w: int, karr: int, k: int, stop: int):
+    """Lane-packed single-row machine: masks are (W,) uint32 words."""
+    planes = pack_planes(values, w)                       # (w, W)
+    nw = planes.shape[-1]
+    valid_w = tail_mask(n, jnp)                           # (W,) uint32
+
+    def load(st: _State):
+        """SL: most recent live entry; lazily invalidate dead top entries."""
+        unsorted = ~st.sorted_mask & valid_w
+        live = st.table_valid & any_lane(st.table_masks & unsorted[None, :])
+        exists = live.any()
+        first = jnp.argmax(live)  # index of most recent live entry
+        # pop (invalidate) dead entries stacked above the live one
+        idx = jnp.arange(karr)
+        valid = jnp.where(exists, st.table_valid & (idx >= first),
+                          jnp.zeros_like(st.table_valid))
+        alive = jnp.where(exists, st.table_masks[first] & unsorted, unsorted)
+        start = jnp.where(exists, st.table_sigs[first] - 1, st.s_top)
+        fresh = ~exists
+        return alive, start.astype(jnp.int32), fresh, valid
+
+    def traverse(alive, start, fresh, st: _State):
+        def step(j, carry):
+            alive, sigs, masks, valid, s_top, seen, crs = carry
+            sig = jnp.int32(w - 1 - j)
+            active = sig <= start
+            col = planes[w - 1 - j]                       # CR: one word row
+            any1 = any_lane(col & alive)
+            any0 = any_lane(~col & alive)  # ~col tail bits are 1, alive's 0
+            mixed = active & any1 & any0
+            new_alive = jnp.where(mixed, alive & ~col, alive)
+            # SR: push entry during fresh traversals at mixed columns
+            rec = mixed & fresh & (k > 0)
+            sigs = jnp.where(rec, jnp.concatenate([sig[None], sigs[:-1]]), sigs)
+            masks = jnp.where(rec, jnp.concatenate([new_alive[None], masks[:-1]]), masks)
+            valid = jnp.where(
+                rec, jnp.concatenate([jnp.ones((1,), bool), valid[:-1]]), valid
+            )
+            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
+            seen = seen | (mixed & fresh)
+            crs = crs + active.astype(jnp.int32)
+            return new_alive, sigs, masks, valid, s_top, seen, crs
+
+        init = (alive, st.table_sigs, st.table_masks, st.table_valid,
+                st.s_top, jnp.bool_(False), st.crs)
+        return jax.lax.fori_loop(0, w, step, init)
+
+    def body(st: _State) -> _State:
+        alive, start, fresh, valid0 = load(st)
+        st = st._replace(table_valid=valid0)
+        alive, sigs, masks, valid, s_top, _, crs = traverse(alive, start, fresh, st)
+        m = popcount(alive).sum().astype(jnp.int32)
+        # k-early-exit: survivors of a full traversal are all duplicates of
+        # the current min, so draining only the still-needed prefix (in row
+        # order) is exact and costs one stall cycle per extra element
+        m = jnp.minimum(m, stop - st.count)
+        rank = cumsum_bits(alive, n) - 1
+        keep = unpack_rows(alive, n) & (rank < m)
+        out_pos = jnp.where(keep, st.count + rank, st.out_pos)
+        return _State(
+            sorted_mask=st.sorted_mask | pack_rows(keep),
+            table_sigs=sigs, table_masks=masks, table_valid=valid,
+            s_top=s_top, out_pos=out_pos,
+            count=st.count + m, crs=crs, drains=st.drains + m - 1,
+        )
+
+    st0 = _State(
+        sorted_mask=jnp.zeros((nw,), jnp.uint32),
+        table_sigs=jnp.zeros((karr,), jnp.int32),
+        table_masks=jnp.zeros((karr, nw), jnp.uint32),
+        table_valid=jnp.zeros((karr,), bool),
+        s_top=jnp.int32(w - 1),
+        out_pos=jnp.zeros((n,), jnp.int32),
+        count=jnp.int32(0), crs=jnp.int32(0), drains=jnp.int32(0),
+    )
+    return jax.lax.while_loop(lambda s: s.count < stop, body, st0)
+
+
+def _run_dense(values, n: int, w: int, karr: int, k: int, stop: int):
+    """Dense boolean machine — the packed path's equivalence baseline."""
 
     def load(st: _State):
         """SL: most recent live entry; lazily invalidate dead top entries."""
@@ -120,9 +236,4 @@ def colskip_sort_jax(values: jax.Array, w: int = 32, k: int = 2,
         out_pos=jnp.zeros((n,), jnp.int32),
         count=jnp.int32(0), crs=jnp.int32(0), drains=jnp.int32(0),
     )
-    st = jax.lax.while_loop(lambda s: s.count < stop, body, st0)
-    # undrained rows scatter out of bounds and are dropped
-    pos = jnp.where(st.sorted_mask, st.out_pos, stop)
-    order = jnp.zeros((stop,), jnp.int32).at[pos].set(
-        jnp.arange(n, dtype=jnp.int32), mode="drop")
-    return values[order], order, st.crs, st.crs + st.drains
+    return jax.lax.while_loop(lambda s: s.count < stop, body, st0)

@@ -32,7 +32,8 @@ from repro.sortserve.scheduler import BankPool
 
 from ._jaxcompat import shard_map
 
-__all__ = ["MeshBankPool", "colskip_sort_mesh", "make_bank_mesh"]
+__all__ = ["MeshBankPool", "colskip_sort_mesh", "make_bank_mesh",
+           "sharded_tile_fn"]
 
 
 def make_bank_mesh(devices=None, axis_name: str = "banks"):
@@ -41,7 +42,8 @@ def make_bank_mesh(devices=None, axis_name: str = "banks"):
     return jax.make_mesh((len(devs),), (axis_name,), devices=devs)
 
 
-def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str):
+def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str,
+                        packed: bool = True):
     """Per-bank body of the sharded sort (called inside ``shard_map``).
 
     ``u_local``: (TB, N_local) — this bank's column shard of the tile.  The
@@ -73,8 +75,11 @@ def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str):
                            m_all, 0).sum(0)                        # (TB,)
         return m_all.sum(0), before
 
+    # the machine's mask carriers may be lane-packed; the manager gates above
+    # see only predicate stacks and survivor counts either way, so the psum
+    # pattern (one collective per bit plane) is representation-invariant
     sorted_mask, out_pos, crs, drains = colskip_machine(
-        u, w, k, stop, or_any=or_any, drain_counts=drain_counts)
+        u, w, k, stop, or_any=or_any, drain_counts=drain_counts, packed=packed)
 
     # output select: each bank scatters its drained rows into the global
     # (TB, stop) result; a psum assembles + broadcasts it (zeros elsewhere)
@@ -92,23 +97,34 @@ def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int):
+def sharded_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int,
+                    packed: bool):
+    """The un-jitted shard-mapped tile body — callers pick how to compile
+    it (plain ``jax.jit`` here; the sortserve backend AOT-compiles it into
+    its executor cache so cold mesh tiles are visible as cache misses)."""
     fn = functools.partial(_colskip_tile_local, w=w, k=k, stop=stop,
-                           axis_name=axis_name)
-    sharded = shard_map(fn, mesh=mesh, in_specs=P(None, axis_name),
-                        out_specs=(P(), P(), P(), P()))
-    return jax.jit(sharded)
+                           axis_name=axis_name, packed=packed)
+    return shard_map(fn, mesh=mesh, in_specs=P(None, axis_name),
+                     out_specs=(P(), P(), P(), P()))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int,
+                      packed: bool):
+    return jax.jit(sharded_tile_fn(mesh, axis_name, w, k, stop, packed))
 
 
 def colskip_sort_mesh(x, mesh, *, w: int = 32, k: int = 2,
                       axis_name: str = "banks",
-                      stop_after: int | None = None):
+                      stop_after: int | None = None,
+                      packed: bool = True):
     """Sort rows of ``x`` (B, N) uint32 over the mesh's ``axis_name`` banks.
 
     Bit-identical to :func:`repro.kernels.colskip.colskip_sort_batched`
     (values, order, and CR/cycle telemetry) — §V.C's invariance of column
     skipping under multi-bank management, realized with collectives.  N must
     divide evenly over the axis; callers fall back to one bank otherwise.
+    ``packed`` selects the lane-packed mask carrier inside each bank.
     """
     b, n = x.shape
     nbanks = mesh.shape[axis_name]
@@ -117,7 +133,7 @@ def colskip_sort_mesh(x, mesh, *, w: int = 32, k: int = 2,
     stop = n if stop_after is None else min(int(stop_after), n)
     if stop < 1:
         raise ValueError(f"stop_after={stop_after} must be >= 1")
-    fn = _compiled_tile_fn(mesh, axis_name, w, k, stop)
+    fn = _compiled_tile_fn(mesh, axis_name, w, k, stop, packed)
     return fn(jnp.asarray(x, jnp.uint32))
 
 

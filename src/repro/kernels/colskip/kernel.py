@@ -21,6 +21,15 @@ NOTE on SIMD adaptation: rows traverse data-dependently different column
 ranges; the kernel vectorizes by predicating each row's activity, so a tile's
 wall-clock follows its slowest row while CR telemetry stays per-row exact —
 an explicitly recorded deviation from the per-array hardware latency.
+
+The default hot path is **lane-packed** (``packed=True``): the alive mask,
+the sorted mask, and the k-entry table masks are carried as
+``(…, ceil(N/32)) uint32`` words (:mod:`repro.core.bitmatrix`), and the w
+bit planes of the tile are pre-packed once so a column read is a word fetch
+instead of a (TB, N) shift — the software analogue of the 1T1R column read
+returning 32 cells per word.  The dense boolean machine (``packed=False``)
+is retained as the equivalence baseline; both produce bit-identical values,
+order, CR, and cycle telemetry (property-tested).
 """
 
 from __future__ import annotations
@@ -31,9 +40,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitmatrix import (
+    any_lane,
+    cumsum_bits,
+    pack_planes,
+    pack_rows,
+    popcount,
+    tail_mask,
+    unpack_rows,
+)
+
 
 def colskip_machine(u, w: int, k: int, stop: int, *,
-                    or_any=None, drain_counts=None):
+                    or_any=None, drain_counts=None, packed: bool = True):
     """Batched §III state machine, parameterized over the bank gates.
 
     ``u`` is one bank's (TB, N_local) column shard (the whole tile when run
@@ -47,15 +66,116 @@ def colskip_machine(u, w: int, k: int, stop: int, *,
         count plus this bank's exclusive bank-major prefix; ``(m, 0)`` for
         one bank.
 
+    The gates see only small predicate stacks and survivor counts, so the
+    same collectives serve the packed and dense carriers unchanged.
+
     Returns ``(sorted_mask, out_pos, crs, drains)`` — local masks/positions
     plus replicated telemetry; callers assemble values/order from them.
     """
-    tb, n_loc = u.shape
-    kk = max(1, k)
     if or_any is None:
         or_any = lambda bits: bits
     if drain_counts is None:
         drain_counts = lambda m: (m, jnp.zeros_like(m))
+    if packed:
+        return _machine_packed(u, w, k, stop, or_any, drain_counts)
+    return _machine_dense(u, w, k, stop, or_any, drain_counts)
+
+
+def _machine_packed(u, w: int, k: int, stop: int, or_any, drain_counts):
+    """Lane-packed machine body — masks travel as uint32 words."""
+    tb, n_loc = u.shape
+    kk = max(1, k)
+    planes = pack_planes(u, w)                            # (w, TB, W)
+    nw = planes.shape[-1]
+    valid_w = tail_mask(n_loc, jnp)                       # (W,) uint32
+
+    def load(sorted_w, t_sigs, t_masks, t_valid):
+        unsorted = ~sorted_w & valid_w                        # (TB, W)
+        hit = any_lane(t_masks & unsorted[:, None, :])        # (TB, kk)
+        live = t_valid & or_any(hit)                          # SL gate
+        exists = live.any(-1)                                 # (TB,)
+        first = jnp.argmax(live, axis=-1)                     # (TB,)
+        idx = jnp.arange(kk)[None, :]
+        valid = jnp.where(exists[:, None], t_valid & (idx >= first[:, None]),
+                          jnp.zeros_like(t_valid))
+        sel = jnp.take_along_axis(t_masks, first[:, None, None], axis=1)[:, 0]
+        alive = jnp.where(exists[:, None], sel & unsorted, unsorted)
+        start = jnp.where(exists,
+                          jnp.take_along_axis(t_sigs, first[:, None], 1)[:, 0] - 1,
+                          jnp.int32(-2))                      # -2 -> use s_top
+        return alive, start, ~exists, valid
+
+    def traverse(alive, start, fresh, t_sigs, t_masks, t_valid, s_top, crs):
+        start = jnp.where(start == -2, s_top, start)          # fresh rows
+
+        def step(j, carry):
+            alive, sigs, masks, valid, s_top, seen, crs = carry
+            sig = jnp.int32(w - 1 - j)
+            active = sig <= start                              # (TB,)
+            col = planes[w - 1 - j]                            # CR: (TB, W)
+            # mixed-column judgement: both predicate bits through one gate
+            # (~col's tail bits are 1 but alive's are always 0)
+            anyb = or_any(jnp.stack([any_lane(col & alive),
+                                     any_lane(~col & alive)], -1))
+            mixed = active & anyb[:, 0] & anyb[:, 1]           # (TB,)
+            new_alive = jnp.where(mixed[:, None], alive & ~col, alive)
+            rec = (mixed & fresh)[:, None] if k > 0 else jnp.zeros((tb, 1), bool)
+            # push (sig, mask) entry: shift table toward older slots
+            sigs = jnp.where(rec, jnp.concatenate(
+                [jnp.full((tb, 1), sig), sigs[:, :-1]], 1), sigs)
+            masks = jnp.where(rec[:, :, None], jnp.concatenate(
+                [new_alive[:, None, :], masks[:, :-1]], 1), masks)
+            valid = jnp.where(rec, jnp.concatenate(
+                [jnp.ones((tb, 1), bool), valid[:, :-1]], 1), valid)
+            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
+            seen = seen | (mixed & fresh)
+            crs = crs + active.astype(jnp.int32)
+            return new_alive, sigs, masks, valid, s_top, seen, crs
+
+        init = (alive, t_sigs, t_masks, t_valid, s_top,
+                jnp.zeros((tb,), bool), crs)
+        out = jax.lax.fori_loop(0, w, step, init)
+        return out[0], out[1], out[2], out[3], out[4], out[6]
+
+    def body(i, st):
+        sorted_w, sigs, masks, valid, s_top, out_pos, count, crs, drains = st
+        done = count >= stop                                   # (TB,)
+        alive, start, fresh, valid = load(sorted_w, sigs, masks, valid)
+        alive, sigs, masks, valid, s_top, crs2 = traverse(
+            alive, start, fresh, sigs, masks, valid, s_top,
+            jnp.zeros((tb,), jnp.int32))
+        # rows already finished must not mutate state or counters
+        alive = jnp.where(done[:, None], jnp.zeros_like(alive), alive)
+        crs = crs + jnp.where(done, 0, crs2)
+        m_tot, before = drain_counts(popcount(alive).sum(-1))
+        # k-early-exit: drain only the still-needed duplicates (bank-major)
+        m_eff = jnp.minimum(m_tot, stop - count)
+        rank = before[:, None] + cumsum_bits(alive, n_loc) - 1
+        keep = unpack_rows(alive, n_loc) & (rank < m_eff[:, None])
+        out_pos = jnp.where(keep, count[:, None] + rank, out_pos)
+        return (sorted_w | pack_rows(keep), sigs, masks, valid, s_top, out_pos,
+                count + m_eff, crs, drains + jnp.maximum(m_eff - 1, 0))
+
+    st0 = (
+        jnp.zeros((tb, nw), jnp.uint32),             # sorted mask (packed)
+        jnp.zeros((tb, kk), jnp.int32),              # table sigs
+        jnp.zeros((tb, kk, nw), jnp.uint32),         # table masks (packed)
+        jnp.zeros((tb, kk), bool),                   # table valid
+        jnp.full((tb,), w - 1, jnp.int32),           # s_top
+        jnp.zeros((tb, n_loc), jnp.int32),           # out_pos
+        jnp.zeros((tb,), jnp.int32),                 # count
+        jnp.zeros((tb,), jnp.int32),                 # crs
+        jnp.zeros((tb,), jnp.int32),                 # drains
+    )
+    st = jax.lax.fori_loop(0, stop, body, st0)
+    sorted_w, _, _, _, _, out_pos, _, crs, drains = st
+    return unpack_rows(sorted_w, n_loc), out_pos, crs, drains
+
+
+def _machine_dense(u, w: int, k: int, stop: int, or_any, drain_counts):
+    """Dense boolean machine body — the pre-packing equivalence baseline."""
+    tb, n_loc = u.shape
+    kk = max(1, k)
 
     def load(sorted_mask, t_sigs, t_masks, t_valid):
         unsorted = ~sorted_mask                               # (TB, Nl)
@@ -139,12 +259,13 @@ def colskip_machine(u, w: int, k: int, stop: int, *,
     return sorted_mask, out_pos, crs, drains
 
 
-def _sort_kernel(w: int, k: int, stop: int | None,
+def _sort_kernel(w: int, k: int, stop: int | None, packed: bool,
                  x_ref, vals_ref, order_ref, crs_ref, cyc_ref):
     u = x_ref[...].astype(jnp.uint32)        # (TB, N)
     tb, n = u.shape
     stop = n if stop is None else min(stop, n)
-    sorted_mask, out_pos, crs, drains = colskip_machine(u, w, k, stop)
+    sorted_mask, out_pos, crs, drains = colskip_machine(u, w, k, stop,
+                                                        packed=packed)
     order = jnp.zeros((tb, stop), jnp.int32)
     rows = jnp.broadcast_to(jnp.arange(tb)[:, None], (tb, n))
     cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (tb, n))
@@ -158,12 +279,15 @@ def _sort_kernel(w: int, k: int, stop: int | None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("w", "k", "tb", "interpret", "stop_after"))
+                   static_argnames=("w", "k", "tb", "interpret", "stop_after",
+                                    "packed"))
 def sort_pallas(x: jax.Array, w: int = 32, k: int = 2, tb: int = 4,
-                interpret: bool = True, stop_after: int | None = None):
+                interpret: bool = True, stop_after: int | None = None,
+                packed: bool = True):
     """Sort rows of ``x`` (B, N) uint32 ascending; returns
     (values, order, column_reads, cycles) with per-row telemetry.
-    ``stop_after`` is the per-row k-early-exit drain (outputs (B, stop))."""
+    ``stop_after`` is the per-row k-early-exit drain (outputs (B, stop));
+    ``packed=False`` selects the dense-boolean equivalence baseline."""
     b, n = x.shape
     stop = n if stop_after is None else min(int(stop_after), n)
     if stop < 1:
@@ -173,7 +297,7 @@ def sort_pallas(x: jax.Array, w: int = 32, k: int = 2, tb: int = 4,
         x = jnp.pad(x, ((0, bp - b), (0, 0)))
     grid = (bp // tb,)
     vals, order, crs, cyc = pl.pallas_call(
-        functools.partial(_sort_kernel, w, k, stop),
+        functools.partial(_sort_kernel, w, k, stop, packed),
         grid=grid,
         in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((tb, stop), lambda i: (i, 0)),

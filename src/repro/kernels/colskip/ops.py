@@ -11,18 +11,21 @@ from . import ref as _ref
 def colskip_sort_batched(x, w: int = 32, k: int = 2, *,
                          use_pallas: bool | None = None,
                          interpret: bool | None = None,
-                         stop_after: int | None = None):
+                         stop_after: int | None = None,
+                         packed: bool = True):
     """Sort rows of ``x`` (B, N) uint32; returns (values, order, CRs, cycles).
 
     CR/cycle telemetry is the paper's latency metric (fed to the cost model).
     ``stop_after=k'`` runs the k-early-exit drain: each row stops after its
     first ``k'`` minima, outputs are (B, k'), and the per-row cycle counts
     cover only the executed iterations (the k-min serving mode).
+    ``packed=False`` selects the dense-boolean machine (equivalence
+    baseline) instead of the lane-packed hot path.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu" or bool(interpret)
     if use_pallas:
         return _k.sort_pallas(x, w, k,
                               interpret=True if interpret is None else interpret,
-                              stop_after=stop_after)
-    return _ref.sort_ref(x, w, k, stop_after=stop_after)
+                              stop_after=stop_after, packed=packed)
+    return _ref.sort_ref(x, w, k, stop_after=stop_after, packed=packed)

@@ -9,6 +9,7 @@ import jax
 from repro.core.jaxsort import colskip_sort_jax
 
 
-def sort_ref(x, w: int = 32, k: int = 2, stop_after: int | None = None):
+def sort_ref(x, w: int = 32, k: int = 2, stop_after: int | None = None,
+             packed: bool = True):
     """(B, N) uint32 -> (values, order, column_reads, cycles), batched."""
-    return jax.vmap(lambda v: colskip_sort_jax(v, w, k, stop_after))(x)
+    return jax.vmap(lambda v: colskip_sort_jax(v, w, k, stop_after, packed))(x)

@@ -81,15 +81,31 @@ def main(argv=None):
     ap.add_argument("--banks", type=int, default=8)
     ap.add_argument("--bank_width", type=int, default=1024)
     ap.add_argument("--sim_width_cap", type=int, default=2048)
+    tri = dict(choices=("auto", "on", "off"), default="auto")
+    ap.add_argument("--use_pallas", **tri,
+                    help="colskip engine: Pallas kernel vs jitted reference "
+                         "(auto = Pallas on TPU)")
+    ap.add_argument("--interpret", **tri,
+                    help="Pallas interpret mode (auto = interpret off-TPU)")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense-boolean §III machine instead of the "
+                         "lane-packed hot path (equivalence baseline)")
+    ap.add_argument("--static_policy", action="store_true",
+                    help="disable measured-EMA routing; static width cap only")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     args = ap.parse_args(argv)
 
     backends = tuple(s for s in args.backends.split(",") if s)
     if args.mesh:
+        if args.use_pallas != "auto" or args.interpret != "auto":
+            ap.error("--use_pallas/--interpret apply to the local colskip "
+                     "engine only; the mesh backend is shard_map-jitted "
+                     "(drop the flags or drop --mesh)")
         # the mesh-sharded simulator replaces the local one; §V.C cycle
         # invariance keeps every telemetry assertion identical
         backends = tuple("colskip_mesh" if b == "colskip" else b
                          for b in backends)
+    as_flag = {"auto": None, "on": True, "off": False}
     cfg = EngineConfig(
         backends=backends,
         tile_rows=args.tile_rows,
@@ -98,6 +114,10 @@ def main(argv=None):
         bank_rows=max(args.tile_rows, 8),
         sim_width_cap=args.sim_width_cap,
         mesh=args.mesh,
+        use_pallas=as_flag[args.use_pallas],
+        interpret=as_flag[args.interpret],
+        packed=not args.dense,
+        adaptive_policy=not args.static_policy,
     )
     engine = SortServeEngine(cfg)
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)
@@ -121,8 +141,12 @@ def main(argv=None):
     print(f"tiles: {telem['batcher']['tiles']}  "
           f"bucket hit-rate: {telem['batcher']['bucket_hit_rate']:.2f}  "
           f"pad col frac: {telem['batcher']['pad_col_frac']:.2f}")
+    print(f"executor cache: {telem['executor_cache']['hits']} hits / "
+          f"{telem['executor_cache']['misses']} compiles "
+          f"(hit-rate {telem['executor_cache']['hit_rate']:.2f})")
     print(f"scheduler drains: {telem['scheduler']['drains']}  "
-          f"oversized waves: {telem['scheduler']['oversized_waves']}")
+          f"oversized waves: {telem['scheduler']['oversized_waves']}  "
+          f"mid-wave admissions: {telem['scheduler']['mid_wave_admissions']}")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

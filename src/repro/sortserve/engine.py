@@ -35,7 +35,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .backends import CostPolicy, TileResult, resolve_backends, solve_numpy
+from .backends import (
+    EXECUTOR_CACHE,
+    CostPolicy,
+    TileResult,
+    resolve_backends,
+    solve_numpy,
+)
 from .batcher import Batcher, Tile
 from .request import SortRequest, SortResponse, decode_values
 from .scheduler import BankPool, Scheduler
@@ -53,10 +59,14 @@ class EngineConfig:
     bank_rows: int = 8
     w: int = 32                     # bit width of the sortable domain
     state_k: int = 2                # colskip state-recording entries
-    sim_width_cap: int = 2048       # widest row the cycle-exact sim serves
+    sim_width_cap: int = 2048       # width prior for the cycle-exact sim
     verify: bool = False            # cross-check every response vs the oracle
     mesh: bool = False              # MeshBankPool: shard groups on devices
     cache_size: int = 1024          # result-cache entries (0 disables)
+    use_pallas: bool | None = None  # colskip engine: Pallas kernel vs ref
+    interpret: bool | None = None   # Pallas interpret mode (None = auto)
+    packed: bool = True             # lane-packed masks in the §III machine
+    adaptive_policy: bool = True    # measured-EMA routing over the cap prior
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -64,13 +74,21 @@ class EngineConfig:
             raise ValueError(
                 f"tile_rows={self.tile_rows} exceeds bank_rows={self.bank_rows}; "
                 "tiles would never fit a bank")
+        if self.mesh and (self.use_pallas is not None
+                          or self.interpret is not None):
+            raise ValueError(
+                "use_pallas/interpret apply to the local colskip engine "
+                "only; the mesh backend is shard_map-jitted (drop the flags "
+                "or drop mesh=True)")
 
 
 class SortServeEngine:
     """Synchronous sort-serving core over a pool of logical banks."""
 
-    def __init__(self, config: EngineConfig | None = None):
+    def __init__(self, config: EngineConfig | None = None, *,
+                 clock=None):
         self.config = config or EngineConfig()
+        self._clock = clock if clock is not None else time.perf_counter
         kwargs = dict(self.config.backend_kwargs)
         # w/state_k are owned by EngineConfig (the CostPolicy and telemetry
         # are computed from them); a conflicting per-backend override would
@@ -83,6 +101,10 @@ class SortServeEngine:
                     f"not backend_kwargs[{sim!r}]")
             kwargs[sim] = {**kwargs.get(sim, {}),
                            "w": self.config.w, "state_k": self.config.state_k}
+            # engine-level execution flags; explicit backend_kwargs win
+            kwargs[sim].setdefault("packed", self.config.packed)
+        kwargs["colskip"].setdefault("use_pallas", self.config.use_pallas)
+        kwargs["colskip"].setdefault("interpret", self.config.interpret)
         if self.config.mesh:
             from repro.dist.bankmesh import MeshBankPool
             self.pool = MeshBankPool(self.config.banks, self.config.bank_width,
@@ -96,9 +118,14 @@ class SortServeEngine:
         self.backends = resolve_backends(self.config.backends, **kwargs)
         self.policy = CostPolicy(self.backends,
                                  sim_width_cap=self.config.sim_width_cap,
-                                 w=self.config.w)
+                                 w=self.config.w,
+                                 adaptive=self.config.adaptive_policy)
         self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
         self.scheduler = Scheduler(self.pool)
+        # per-engine executor hit/miss counts (the cache itself is
+        # process-global; per-call warm flags keep attribution correct even
+        # with several engines or threads sharing it)
+        self._exec_stats = {"hits": 0, "misses": 0}
         self._cache: OrderedDict = OrderedDict()
         # bounded window for percentiles + running totals for all-time mean,
         # so a long-lived service does not accumulate one float per request
@@ -181,6 +208,7 @@ class SortServeEngine:
         snap_agg = copy.deepcopy(self._agg)
         snap_batch = copy.deepcopy(self.batcher.stats)
         snap_sched = copy.deepcopy(self.scheduler.stats)
+        snap_exec = dict(self._exec_stats)
         snap_banks = [(b.tiles_served, b.rows_served, b.busy_cycles)
                       for b in self.pool.banks]
         try:
@@ -190,6 +218,7 @@ class SortServeEngine:
             self._agg = snap_agg
             self.batcher.stats = snap_batch
             self.scheduler.stats = snap_sched
+            self._exec_stats = snap_exec
             for bank, (t, r, c) in zip(self.pool.banks, snap_banks):
                 bank.tiles_served, bank.rows_served, bank.busy_cycles = t, r, c
             raise
@@ -224,9 +253,22 @@ class SortServeEngine:
 
     def _execute(self, tile: Tile) -> TileResult:
         backend = self.policy.choose(tile)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         result = backend.run(tile)
-        result.meta["wall_s"] = time.perf_counter() - t0
+        result.meta["wall_s"] = self._clock() - t0
+        warm = result.meta.get("exec_warm")     # None: backend has no cache
+        if warm is not None:
+            self._exec_stats["hits" if warm else "misses"] += 1
+        # adaptive cost policy: measured wall-clock feeds the routing EMA —
+        # but only warm executions.  A cold run's wall is dominated by the
+        # one-time AOT compile; recording it would poison the EMA (e.g. an
+        # exploration probe measured at compile cost would lose the race
+        # forever).  A skipped cold probe leaves the EMA unset, so the next
+        # tile probes again — now warm — and the race settles on real data.
+        if warm is not False:
+            self.policy.observe(backend.name, tile.op, tile.shape[1],
+                                tile.shape[0], result.meta["wall_s"],
+                                k=tile.k)
         pb = self._agg["per_backend"].setdefault(
             backend.name, {"tiles": 0, "requests": 0, "rows": 0,
                            "column_reads": 0, "wall_s": 0.0})
@@ -280,6 +322,12 @@ class SortServeEngine:
             )
 
     # ------------------------------------------------------------- telemetry
+    def _executor_cache_stats(self) -> dict:
+        hits, misses = self._exec_stats["hits"], self._exec_stats["misses"]
+        return {"hits": hits, "misses": misses,
+                "hit_rate": hits / max(1, hits + misses),
+                "size": EXECUTOR_CACHE.counters()[2]}
+
     def telemetry(self) -> dict:
         lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
         bs = self.batcher.stats
@@ -308,6 +356,9 @@ class SortServeEngine:
                 "size": len(self._cache),
                 "capacity": self.config.cache_size,
             },
+            # compiled-executor cache (process-global; deltas since this
+            # engine was built): warm tiles skip tracing/lowering entirely
+            "executor_cache": self._executor_cache_stats(),
             "batcher": {
                 "tiles": bs.tiles,
                 "requests": bs.requests,

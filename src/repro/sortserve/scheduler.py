@@ -18,7 +18,13 @@ sorter.  The serving analogue implemented here:
     retired oldest-first until it fits; a tile wider than the whole pool
     (``shards > banks``) is executed in ``ceil(shards / banks)`` waves with
     every bank enlisted — the §IV behaviour of a dataset larger than the
-    total bank capacity.
+    total bank capacity;
+  * **mid-wave admission**: when the final wave of an oversized tile is
+    partial (``shards % banks != 0``), the banks it does not need free one
+    wave early — the scheduler releases them the moment the last wave
+    starts and admits queued tiles onto them instead of waiting for the
+    whole tile to retire (the first step toward continuous batching; the
+    drain policy itself — oldest-first retirement — is unchanged).
 
 Execution itself is delegated to a callback (the engine binds it to the
 cost policy + backend registry), so the scheduler is backend-agnostic and
@@ -71,6 +77,18 @@ class _Placement:
     tile_id: int
     bank_ids: list[int]
     waves: int = 1
+    # banks still needed in the final wave; the rest free one wave early
+    tail_banks: list[int] = field(default_factory=list)
+    early_released: bool = False
+
+    def __post_init__(self):
+        if not self.tail_banks:
+            self.tail_banks = list(self.bank_ids)
+
+    @property
+    def early_banks(self) -> list[int]:
+        tail = set(self.tail_banks)
+        return [i for i in self.bank_ids if i not in tail]
 
 
 class BankPool:
@@ -95,8 +113,11 @@ class BankPool:
                 waves = -(-shards // len(self.banks))
                 for bank in self.banks:
                     bank.load(tile_id, b_rows)
+                tail = shards % len(self.banks) or len(self.banks)
                 return _Placement(tile, tile_id, [b.index for b in self.banks],
-                                  waves=waves)
+                                  waves=waves,
+                                  tail_banks=[b.index for b in
+                                              self.banks[:tail]])
             return None
         free = sorted((b for b in self.banks if b.free_rows >= b_rows),
                       key=lambda b: (b.bank_rows - b.free_rows, b.index))
@@ -116,9 +137,28 @@ class BankPool:
         """OR-combined pool-busy predicate (the manager's global enable)."""
         return any(bank.loaded for bank in self.banks)
 
+    def release_early(self, placement: _Placement, cycles: int | None) -> None:
+        """Free the banks an oversized tile's partial final wave never uses.
+
+        They were busy for ``waves - 1`` waves only; releasing them when the
+        last wave starts lets queued tiles be admitted mid-wave."""
+        if placement.early_released:
+            return
+        b_rows = placement.tile.shape[0]
+        for i in placement.early_banks:
+            bank = self.banks[i]
+            bank.release(placement.tile_id, b_rows)
+            bank.tiles_served += 1
+            bank.rows_served += b_rows
+            if cycles is not None:
+                bank.busy_cycles += int(cycles) * (placement.waves - 1)
+        placement.early_released = True
+
     def retire(self, placement: _Placement, cycles: int | None) -> None:
         b_rows = placement.tile.shape[0]
-        for i in placement.bank_ids:
+        banks_left = (placement.tail_banks if placement.early_released
+                      else placement.bank_ids)
+        for i in banks_left:
             bank = self.banks[i]
             bank.release(placement.tile_id, b_rows)
             bank.tiles_served += 1
@@ -136,6 +176,7 @@ class SchedulerStats:
     oversized_tiles: int = 0
     oversized_waves: int = 0
     max_banks_in_flight: int = 0
+    mid_wave_admissions: int = 0    # tiles admitted onto early-freed banks
 
 
 class Scheduler:
@@ -151,52 +192,88 @@ class Scheduler:
         results: list[tuple[Tile, object]] = []
         placed: list[_Placement] = []
         pending = list(tiles)
-        next_id = 0
+        ids = iter(range(1 << 30))
 
-        def drain(count: int | None = None) -> None:
-            self.stats.drains += 1
-            n = len(placed) if count is None else min(count, len(placed))
-            for _ in range(n):
-                pl = placed[0]                # oldest-first
-                assert self.pool.ready(pl), "executed a tile before all banks loaded"
-                result = execute(pl.tile)
-                cycles = getattr(result, "cycles", None)
-                total = int(cycles.sum()) if cycles is not None else None
-                self.pool.retire(pl, total)
-                placed.pop(0)                 # only after banks are released
-                results.append((pl.tile, result))
+        def record(pl: _Placement) -> None:
+            placed.append(pl)
+            self.stats.tiles += 1
+            if pl.waves > 1:
+                self.stats.oversized_tiles += 1
+                self.stats.oversized_waves += pl.waves
+            in_flight = sum(1 for b in self.pool.banks if b.loaded)
+            self.stats.max_banks_in_flight = max(
+                self.stats.max_banks_in_flight, in_flight)
+
+        def drain_one(held: Tile | None = None,
+                      count_event: bool = True) -> _Placement | None:
+            """Execute + retire the oldest placement (the drain policy).
+
+            When its final wave is partial, the banks that wave does not
+            need are released the moment the last wave starts, and queued
+            tiles — the held (unplaceable) tile first, then pending in FIFO
+            order — are admitted onto them mid-wave instead of waiting for
+            the full retire.  Returns the held tile's placement if it was
+            admitted this way.  ``stats.drains`` counts drain *events* (one
+            forced drain, or the whole final flush), not tiles retired."""
+            if count_event:
+                self.stats.drains += 1
+            pl = placed[0]                    # oldest-first
+            assert self.pool.ready(pl), "executed a tile before all banks loaded"
+            result = execute(pl.tile)
+            cycles = getattr(result, "cycles", None)
+            total = int(cycles.sum()) if cycles is not None else None
+            held_pl = None
+            if pl.waves > 1 and pl.early_banks:
+                self.pool.release_early(pl, total)     # final wave begins
+                if held is not None:
+                    held_pl = self.pool.try_place(held, next(ids))
+                    if held_pl is not None:
+                        record(held_pl)
+                        self.stats.mid_wave_admissions += 1
+                i = 0                          # best-effort FIFO backfill
+                while i < len(pending):
+                    p2 = self.pool.try_place(pending[i], next(ids))
+                    if p2 is not None:
+                        record(p2)
+                        self.stats.mid_wave_admissions += 1
+                        pending.pop(i)
+                    else:
+                        i += 1
+            self.pool.retire(pl, total)
+            placed.pop(0)                     # only after banks are released
+            results.append((pl.tile, result))
+            return held_pl
 
         try:
             while pending:
                 tile = pending.pop(0)
-                while True:
-                    pl = self.pool.try_place(tile, next_id)
-                    if pl is not None:
-                        break
+                pl = self.pool.try_place(tile, next(ids))
+                if pl is not None:
+                    record(pl)
+                while pl is None:
                     if not placed:            # idle pool and still no fit
                         raise ValueError(
                             f"tile {tile.shape} cannot be placed even on an "
                             f"idle pool: need bank_rows >= {tile.shape[0]} "
                             f"(have {self.pool.banks[0].bank_rows})")
-                    drain(count=1)            # free the oldest shard group
-                next_id += 1
-                placed.append(pl)
-                self.stats.tiles += 1
-                if pl.waves > 1:
-                    self.stats.oversized_tiles += 1
-                    self.stats.oversized_waves += pl.waves
-                in_flight = sum(1 for b in self.pool.banks if b.loaded)
-                self.stats.max_banks_in_flight = max(
-                    self.stats.max_banks_in_flight, in_flight)
-            if self.pool.any_pending():
-                drain()
+                    pl = drain_one(held=tile)   # frees the oldest shard group
+                    if pl is None:
+                        pl = self.pool.try_place(tile, next(ids))
+                        if pl is not None:
+                            record(pl)
+            if placed:
+                self.stats.drains += 1        # the final flush: one event
+                while placed:
+                    drain_one(count_event=False)
         except BaseException:
             # a failed batch must not poison the pool: release whatever is
             # still loaded (no telemetry credit) before propagating
             for pl in placed:
                 b_rows = pl.tile.shape[0]
                 for i in pl.bank_ids:
-                    self.pool.banks[i].release(pl.tile_id, b_rows)
+                    bank = self.pool.banks[i]
+                    if pl.tile_id in bank.loaded:
+                        bank.release(pl.tile_id, b_rows)
             raise
         assert not self.pool.any_pending(), "banks left loaded after final drain"
         return results
@@ -208,6 +285,7 @@ class Scheduler:
             "oversized_tiles": self.stats.oversized_tiles,
             "oversized_waves": self.stats.oversized_waves,
             "max_banks_in_flight": self.stats.max_banks_in_flight,
+            "mid_wave_admissions": self.stats.mid_wave_admissions,
             "banks": [
                 {"index": b.index, "tiles_served": b.tiles_served,
                  "rows_served": b.rows_served, "busy_cycles": b.busy_cycles}

@@ -153,7 +153,48 @@ def test_scheduler_oversized_tile_runs_in_waves():
     sched.run(tiles, ex)
     assert sched.stats.oversized_tiles == 1
     assert sched.stats.oversized_waves == 4                     # ceil(8/2)
+    # 8 % 2 == 0: every wave is full, so nothing frees early
+    assert sched.stats.mid_wave_admissions == 0
     assert len(ex.calls) == 1
+
+
+def _raw_tile(n_cols: int, rows: int = 4):
+    """Scheduler-level tile with no requests attached (padding-only)."""
+    from repro.sortserve.batcher import Tile
+    return Tile(op="sort", data=np.zeros((rows, n_cols), np.uint32), k=None,
+                entries=[], pad_rows=rows)
+
+
+def test_scheduler_mid_wave_admission_on_partial_final_wave():
+    """A queued tile is admitted the moment the final partial wave frees
+    banks, instead of waiting for the oversized tile to fully retire."""
+    pool = BankPool(banks=3, bank_width=32, bank_rows=4)
+    sched = Scheduler(pool)
+    # 128 cols -> 4 shards over 3 banks -> 2 waves, final wave needs 1 bank:
+    # banks 1 and 2 idle through the last wave and admit the queued tile
+    big, small = _raw_tile(128), _raw_tile(32)
+    results = sched.run([big, small], _CountingExec())
+    assert [t.shape for t, _ in results] == [(4, 128), (4, 32)]
+    assert sched.stats.oversized_waves == 2
+    assert sched.stats.mid_wave_admissions == 1
+    telem = sched.telemetry()
+    # tail bank busy both waves (2 x 40); early-freed bank 1 took the small
+    # tile during the final wave (40 + 40); bank 2 freed after one wave
+    assert telem["banks"][0]["busy_cycles"] == 80
+    assert telem["banks"][1]["busy_cycles"] == 80
+    assert telem["banks"][2]["busy_cycles"] == 40
+    assert all(bk.free_rows == bk.bank_rows for bk in pool.banks)
+
+
+def test_scheduler_mid_wave_backfills_pending_queue():
+    """Pending tiles (not just the held one) backfill early-freed banks."""
+    pool = BankPool(banks=3, bank_width=32, bank_rows=4)
+    sched = Scheduler(pool)
+    tiles = [_raw_tile(128), _raw_tile(32), _raw_tile(32)]
+    results = sched.run(tiles, _CountingExec())
+    assert len(results) == 3
+    assert sched.stats.mid_wave_admissions == 2   # both small tiles admitted
+    assert all(bk.free_rows == bk.bank_rows for bk in pool.banks)
 
 
 # ----------------------------------------------------------- end-to-end
@@ -211,6 +252,160 @@ def test_multibank_vs_colskip_cycle_equality(state_k, banks):
         assert np.array_equal(mb.values, mono.values)
 
 
+class _FakeClock:
+    """Deterministic monotonically advancing clock for EMA tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _sort_tile(n: int):
+    b = Batcher(tile_rows=1, min_bucket=8)
+    b.add(SortRequest("sort", np.arange(n, dtype=np.uint32)))
+    return b.flush()[0]
+
+
+def test_adaptive_policy_measured_ema_overrides_width_cap():
+    """Measured wall-clock (fake clock) beats the static sim_width_cap: a
+    width past the cap routes back to the simulator once both contenders
+    are measured and the simulator is faster — and flips again when the
+    measurements flip (ROADMAP adaptive cost policy)."""
+    from repro.sortserve.backends import CostPolicy, resolve_backends
+    clock = _FakeClock()
+    policy = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=64)
+    tile = _sort_tile(256)
+    assert policy.choose(tile).name == "jaxsort"   # prior: beyond the cap
+    for _ in range(3):                             # measured: colskip faster
+        t0 = clock()
+        policy.observe("jaxsort", "sort", 256, 1, clock.tick(1e-2) - t0)
+        t0 = clock()
+        policy.observe("colskip", "sort", 256, 1, clock.tick(1e-4) - t0)
+    assert policy.choose(tile).name == "colskip"
+    for _ in range(60):                            # EMA converges back
+        t0 = clock()
+        policy.observe("jaxsort", "sort", 256, 1, clock.tick(1e-6) - t0)
+    assert policy.choose(tile).name == "jaxsort"
+
+
+def test_adaptive_policy_bounded_exploration_and_static_mode():
+    from repro.sortserve.backends import CostPolicy, resolve_backends
+    clock = _FakeClock()
+    policy = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=1024, explore_after=4)
+    tile = _sort_tile(32)
+    assert policy.choose(tile).name == "colskip"   # prior: under the cap
+    for _ in range(4):                             # saturate the prior's pick
+        t0 = clock()
+        policy.observe("colskip", "sort", 32, 1, clock.tick(1e-3) - t0)
+    # alternative never measured -> one exploration probe
+    assert policy.choose(tile).name == "jaxsort"
+    t0 = clock()
+    policy.observe("jaxsort", "sort", 32, 1, clock.tick(1.0) - t0)  # slow
+    assert policy.choose(tile).name == "colskip"   # measured race settled
+    # adaptive off: the static prior rules no matter what was measured
+    static = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=1024, adaptive=False, explore_after=1)
+    for _ in range(8):
+        static.observe("colskip", "sort", 32, 1, 1.0)
+    assert static.choose(tile).name == "colskip"
+
+
+def test_adaptive_policy_ema_keys_separate_k():
+    """kmin EMAs are per-k: the simulator's cost scales with the drain
+    count, so a fast k=1 measurement must not route a k=128 tile."""
+    from repro.sortserve.backends import CostPolicy, resolve_backends
+    policy = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=64)
+    for _ in range(3):                       # k=1 race: colskip wins
+        policy.observe("colskip", "kmin", 256, 1, 1e-5, k=1)
+        policy.observe("jaxsort", "kmin", 256, 1, 1e-3, k=1)
+    assert policy.measured_s_per_row("colskip", "kmin", 256, k=1) is not None
+    assert policy.measured_s_per_row("colskip", "kmin", 256, k=128) is None
+    b = Batcher(tile_rows=1, min_bucket=8)
+    b.add(SortRequest("kmin", np.arange(256, dtype=np.uint32), k=128))
+    big_k = b.flush()[0]
+    assert big_k.k == 128
+    # unmeasured k=128 signature keeps the prior (jaxsort past the cap)
+    assert policy.choose(big_k).name == "jaxsort"
+
+
+def test_cli_rejects_mesh_with_local_engine_flags():
+    """--use_pallas/--interpret only reach the local colskip engine; with
+    --mesh they would be silently dropped, so the CLI refuses."""
+    from repro.launch.sortserve import main
+    with pytest.raises(SystemExit):
+        main(["--mesh", "--use_pallas", "on", "--requests", "1"])
+    with pytest.raises(SystemExit):
+        main(["--mesh", "--interpret", "on", "--requests", "1"])
+
+
+def test_engine_config_rejects_mesh_with_local_engine_flags():
+    """Same contract one layer down, for programmatic callers."""
+    with pytest.raises(ValueError, match="mesh"):
+        EngineConfig(backends=("colskip_mesh",), mesh=True, use_pallas=True)
+    with pytest.raises(ValueError, match="mesh"):
+        EngineConfig(backends=("colskip_mesh",), mesh=True, interpret=False)
+
+
+def test_engine_feeds_policy_ema_with_injected_clock():
+    """The engine measures tile executions on its (injectable) clock and
+    feeds the routing EMA — but only warm ones: a cold run's wall is
+    compile-dominated and would poison the comparison."""
+    from repro.sortserve.backends import EXECUTOR_CACHE
+    EXECUTOR_CACHE.clear()
+    clock = _FakeClock()
+    engine = SortServeEngine(EngineConfig(
+        backends=("colskip",), tile_rows=4, min_bucket=8, banks=4,
+        bank_width=64, bank_rows=4, sim_width_cap=128, cache_size=0),
+        clock=clock)
+    engine.submit([SortRequest("sort", np.arange(16, dtype=np.uint32))])
+    assert engine.policy.measured_s_per_row("colskip", "sort", 16) is None
+    engine.submit([SortRequest("sort", np.arange(16, dtype=np.uint32)[::-1]
+                               .copy())])
+    assert engine.policy.measured_s_per_row("colskip", "sort", 16) is not None
+
+
+def test_adaptive_policy_never_probes_simulator_far_past_cap():
+    """Exploration toward the O(N*w)-per-output simulator is width-bounded:
+    beyond 2x the cap the probe would stall the engine for exactly the
+    pathological case the cap exists to prevent."""
+    from repro.sortserve.backends import CostPolicy, resolve_backends
+    policy = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=64, explore_after=2)
+    wide = _sort_tile(512)                         # 8x the cap
+    for _ in range(8):
+        policy.observe("jaxsort", "sort", 512, 1, 1e-3)
+    assert policy.choose(wide).name == "jaxsort"   # no probe: too far past cap
+    near = _sort_tile(128)                         # within 2x the cap
+    for _ in range(8):
+        policy.observe("jaxsort", "sort", 128, 1, 1e-3)
+    assert policy.choose(near).name == "colskip"   # probe allowed
+
+
+def test_executor_cache_warm_hit_on_repeated_signature():
+    """A second tile with the same (op, B, N, k, flags) signature runs on
+    the warm compiled executor — no new compile, a cache hit."""
+    from repro.sortserve.backends import EXECUTOR_CACHE
+    engine = small_engine(cache_size=0)
+    engine.submit([SortRequest("sort", np.arange(32, dtype=np.uint32))])
+    h1, m1, _ = EXECUTOR_CACHE.counters()
+    engine.submit([SortRequest("sort",
+                               np.arange(32, dtype=np.uint32)[::-1].copy())])
+    h2, m2, _ = EXECUTOR_CACHE.counters()
+    assert m2 == m1                     # same signature: nothing recompiled
+    assert h2 == h1 + 1
+    ec = engine.telemetry()["executor_cache"]
+    assert ec["hits"] >= 1 and ec["hit_rate"] > 0
+
+
 def test_cost_policy_routing():
     engine = small_engine(sim_width_cap=64)
     rng = np.random.default_rng(0)
@@ -246,7 +441,11 @@ def test_unservable_op_rejected_at_ingress():
 
 
 def test_failed_batch_rolls_back_all_telemetry():
-    """A mid-batch failure leaves every telemetry section as it was."""
+    """A mid-batch failure leaves every telemetry section as it was.
+
+    The compiled-executor cache is exempt: it is process-global warm-compile
+    state (the AOT analogue of the jit cache), and an executable built for a
+    tile that later failed stays warm for the retry by design."""
     engine = small_engine()
     engine.submit(make_workload(8, min_len=8, max_len=64, seed=11))
     before = engine.telemetry()
@@ -256,7 +455,9 @@ def test_failed_batch_rolls_back_all_telemetry():
     with pytest.raises(TypeError):
         engine.submit([SortRequest("sort", np.arange(16, dtype=np.uint32)),
                        bad])
-    assert engine.telemetry() == before
+    after = engine.telemetry()
+    before.pop("executor_cache"), after.pop("executor_cache")
+    assert after == before
 
 
 def test_backend_hint_and_unknown_backend():
