@@ -23,6 +23,7 @@ SUITES = [
     "benchmarks.sortserve_bench",
     "benchmarks.distserve_bench",
     "benchmarks.packed_bench",
+    "benchmarks.streaming_bench",
 ]
 
 

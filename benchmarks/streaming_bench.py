@@ -1,0 +1,247 @@
+"""Continuous vs flush-barrier serving under arrival workloads.
+
+Measures the PR-4 claim: event-clock admission (tiles granted banks the
+moment earlier tiles drain) beats batch-synchronous waves (every batch a
+global flush barrier) on tail latency and sustained throughput once traffic
+arrives continuously instead of as one pre-loaded queue.
+
+The comparison is a deterministic discrete-event simulation in the §V
+cycle domain — both disciplines run the *same* arrival trace through the
+same :class:`ContinuousScheduler` machinery and the same cost-model service
+times (``estimate_colskip_cycles``), so the only difference is the serving
+policy:
+
+  * **continuous** — every tile is fed with its own arrival timestamp; the
+    event clock admits it when banks drain; its latency is arrival->retire;
+  * **flush-barrier** — arrivals are collected into batches (closed on a
+    window or a size cap, like the PR-1 micro-batching front door), each
+    batch is fed all-at-once after the previous batch fully retired, and
+    every tile's latency runs to its **batch end** — the barrier.
+
+Workloads: Poisson arrivals (exponential gaps, mixed widths) for the
+steady-traffic picture, and a bursty trace (a 4-shard giant plus a cohort
+of narrow tiles per burst) where the barrier strands half the pool in
+every batch tail.  Latencies are reported at the modeled 500 MHz clock;
+tiles/s is tiles over makespan at that clock.
+
+Two wall-clock rows ride along: a real engine serving a streaming session
+locally, and (when jax devices exist) through the mesh bank pool — the
+``--mesh`` analogue inside one process.
+
+    PYTHONPATH=src python -m benchmarks.run --only streaming --out BENCH_4.json
+    PYTHONPATH=src python -m benchmarks.streaming_bench [--mesh]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.costmodel import BASE_CLOCK_MHZ, estimate_colskip_cycles
+from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
+from repro.sortserve.batcher import Tile
+from repro.sortserve.scheduler import BankPool, ContinuousScheduler
+
+ROWS = 8
+CYC_TO_S = 1.0 / (BASE_CLOCK_MHZ * 1e6)
+
+
+def _tile(width: int) -> Tile:
+    return Tile(op="sort", data=np.zeros((ROWS, width), np.uint32), k=None,
+                entries=[], pad_rows=ROWS)
+
+
+class ModelExec:
+    """Deterministic executor: §V cost-model cycles, no real sorting."""
+
+    def __call__(self, tile):
+        per_row = int(estimate_colskip_cycles(tile.shape[1]))
+        return type("R", (), {"cycles": np.full(tile.shape[0], per_row,
+                                                np.int64)})()
+
+
+def poisson_trace(n: int, seed: int, mean_gap: float,
+                  widths=(64, 128, 256, 512)):
+    """(arrival_cycle, width) pairs with exponential inter-arrival gaps."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(mean_gap))
+        out.append((t, int(rng.choice(widths))))
+    return out
+
+def bursty_trace(n_bursts: int, gap: float, n_narrow: int = 12,
+                 wide: int = 1024, narrow: int = 64):
+    """Per burst: one 4-shard giant plus a cohort of 1-shard tiles.
+
+    The giant's service time exceeds the burst gap, so a flush barrier
+    strands the pool's other banks through every batch tail; continuous
+    admission backfills them from the next burst."""
+    out = []
+    for b in range(n_bursts):
+        t = b * gap
+        out.append((t, wide))
+        out.extend((t, narrow) for _ in range(n_narrow))
+    return out
+
+
+def serve_continuous(trace, pool: BankPool):
+    """Feed the trace with real arrival times; latency = arrival -> retire."""
+    sched = ContinuousScheduler(pool)
+    ex = ModelExec()
+    lat = []
+    by_id = {}
+
+    def sink(tile, result, exc):
+        lat.append(sched.vt - by_id[id(tile)])
+
+    tiles = [(_tile(w), t) for t, w in trace]
+    for tile, t in tiles:
+        by_id[id(tile)] = t
+    for tile, t in tiles:
+        sched.feed([tile], ex, sink=sink, at=t)
+    sched.pump()
+    return np.asarray(lat), sched.telemetry()
+
+
+def serve_flush_barrier(trace, pool: BankPool, window: float,
+                        max_batch: int = 16):
+    """Micro-batching with a global barrier, on the same event machinery.
+
+    Batches close ``window`` cycles after their first arrival or at
+    ``max_batch`` tiles; batch b is fed all-at-once at
+    ``max(close_b, end_{b-1})`` (the engine is synchronous: submit returns
+    only when every tile retired) and every tile's latency runs to the
+    batch's last retire."""
+    sched = ContinuousScheduler(pool)
+    ex = ModelExec()
+    batches, cur = [], []
+    for t, w in trace:
+        if cur and (t - cur[0][0] >= window or len(cur) >= max_batch):
+            batches.append(cur)
+            cur = []
+        cur.append((t, w))
+    if cur:
+        batches.append(cur)
+    lat = []
+    for batch in batches:
+        close = max(batch[0][0] + window, batch[-1][0])
+        start = max(close, sched.vt)
+        done = []
+        sched.feed([_tile(w) for _, w in batch], ex,
+                   sink=lambda tile, result, exc: done.append(tile),
+                   at=start)
+        sched.pump()
+        end = sched.vt                     # the flush barrier: batch retire
+        lat.extend(end - t for t, _ in batch)
+    return np.asarray(lat), sched.telemetry()
+
+
+def _quantiles_us(lat_cyc: np.ndarray) -> dict:
+    to_us = CYC_TO_S * 1e6
+    return {q: float(np.percentile(lat_cyc, q)) * to_us
+            for q in (50, 95, 99)}
+
+
+def _tiles_per_s(n_tiles: int, makespan_cyc: float) -> float:
+    return n_tiles / (makespan_cyc * CYC_TO_S) if makespan_cyc else 0.0
+
+
+def _bench_discipline(report, name: str, trace, window: float):
+    rows = {}
+    for mode in ("continuous", "flush"):
+        pool = BankPool(banks=8, bank_width=256, bank_rows=ROWS)
+        if mode == "continuous":
+            lat, telem = serve_continuous(trace, pool)
+        else:
+            lat, telem = serve_flush_barrier(trace, pool, window)
+        q = _quantiles_us(lat)
+        tps = _tiles_per_s(len(trace), telem["continuous"]["makespan_vt"])
+        rows[mode] = (q, tps, telem)
+        report(
+            name=f"streaming/{name}_{mode}",
+            us_per_call=q[95],
+            derived=(f"p50={q[50]:.0f}us p95={q[95]:.0f}us p99={q[99]:.0f}us "
+                     f"tiles_s={tps:.0f} "
+                     f"occ={telem['continuous']['occupancy']:.2f} "
+                     f"midwave={telem['mid_wave_admissions']}"),
+        )
+    (qc, tc, _), (qf, tf, _) = rows["continuous"], rows["flush"]
+    p95_ratio = qf[95] / qc[95] if qc[95] else float("inf")
+    tps_ratio = tc / tf if tf else float("inf")
+    ok = qc[95] < qf[95] and tps_ratio >= 1.2
+    report(
+        name=f"streaming/{name}_speedup",
+        us_per_call=qc[95],
+        derived=(f"p95_ratio={p95_ratio:.2f}x tiles_s_ratio={tps_ratio:.2f}x "
+                 + ("PASS" if ok else "MISS")),
+    )
+    return ok
+
+
+def _bench_real_session(report, mesh: bool):
+    """Wall-clock sanity row: a real engine serving a streaming session."""
+    label = "mesh" if mesh else "local"
+    backends = (("colskip_mesh", "numpy") if mesh
+                else ("colskip", "numpy"))
+    try:
+        engine = SortServeEngine(EngineConfig(
+            backends=backends, tile_rows=4, banks=8, bank_width=256,
+            bank_rows=4, sim_width_cap=512, cache_size=0, mesh=mesh))
+    except Exception as e:                 # no devices / no jax
+        report(name=f"streaming/session_{label}", us_per_call=0.0,
+               derived=f"SKIP {type(e).__name__}")
+        return
+    rng = np.random.default_rng(3)
+    reqs = [SortRequest("sort", rng.integers(0, 1 << 32, int(rng.choice(
+        (64, 128, 256))), dtype=np.uint64).astype(np.uint32))
+        for _ in range(24)]
+    engine.submit([SortRequest("sort", r.payload.copy()) for r in reqs[:8]])
+    session = engine.begin()               # warm pass above, measured below
+    t0 = time.perf_counter()
+    got = []
+    for i in range(0, len(reqs), 4):
+        got += session.feed(reqs[i:i + 4])
+    got += session.drain()
+    dt = time.perf_counter() - t0
+    telem = session.telemetry()
+    report(
+        name=f"streaming/session_{label}",
+        us_per_call=dt * 1e6 / len(reqs),
+        derived=(f"{len(reqs) / dt:.0f}req/s "
+                 f"p95={telem['latency_s']['p95'] * 1e3:.1f}ms "
+                 f"admissions={telem['scheduler_delta']['admissions']} "
+                 + ("PASS" if len(got) == len(reqs) else "MISS")),
+    )
+
+
+def run(report, mesh: bool = False):
+    # Poisson steady traffic: ~70% offered load on the 8-bank pool
+    trace_p = poisson_trace(400, seed=11, mean_gap=2400.0)
+    _bench_discipline(report, "poisson", trace_p, window=4000.0)
+    # Bursty: a 4-shard giant + 12 narrow tiles per burst, gap below the
+    # giant's service time — the acceptance workload (BENCH_4)
+    trace_b = bursty_trace(40, gap=40_000.0)
+    _bench_discipline(report, "bursty", trace_b, window=8000.0)
+    _bench_real_session(report, mesh=False)
+    if mesh:
+        _bench_real_session(report, mesh=True)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="also serve a session through the mesh bank pool")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+
+    def report(name, us_per_call, derived):
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    run(report, mesh=args.mesh)
+
+
+if __name__ == "__main__":
+    main()

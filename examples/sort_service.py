@@ -1,4 +1,4 @@
-"""Sort-as-a-service demo: batch submit + async micro-batching front door.
+"""Sort-as-a-service demo: batch submit, streaming session, async front door.
 
 Run:  PYTHONPATH=src python examples/sort_service.py
 """
@@ -35,6 +35,22 @@ def main():
                 else resp.indices[:5])
         print(f"{req.op:8s} n={req.n:4d} -> backend={resp.backend:10s} "
               f"cycles={resp.cycles} head={head}")
+
+    # --- streaming session: feed as traffic arrives, no flush barrier -----
+    session = engine.begin(max_age_s=0.005)
+    got = []
+    for wave in range(3):                      # three arrival waves
+        chunk = [SortRequest("sort",
+                             rng.integers(0, 1 << 16, 48, dtype=np.int64)
+                             .astype(np.uint32))
+                 for _ in range(4)]
+        got += session.feed(chunk)             # full buckets dispatch now
+    got += session.drain()                     # close stragglers
+    st = session.telemetry()
+    print(f"session: {st['completed']}/{st['requests']} served in "
+          f"{st['tiles']} tiles, "
+          f"{st['scheduler_delta']['admissions']} event-clock admissions, "
+          f"p95={st['latency_s']['p95'] * 1e3:.2f}ms")
 
     # --- async: single-request callers coalesced into warm tiles ----------
     server = AsyncSortServe(engine, max_batch=32, max_wait_ms=5.0)

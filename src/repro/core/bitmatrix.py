@@ -29,7 +29,9 @@ cells, the software analogue of a 1T1R column read returning a machine word:
   * :func:`any_lane` — OR-reduction over the word axis (the sense-amp "saw a
     bit" predicate).
   * :func:`cumsum_bits` — per-element inclusive rank of the set bits (the
-    row-drain rank), expanded dense because its consumer (``out_pos``) is.
+    row-drain rank), computed fully in-lane: an exclusive word-prefix sum of
+    per-word popcounts plus an in-word popcount rank, so the O(N) boolean
+    scan the dense expansion needed becomes an O(N/32) word scan.
 
 Every helper accepts numpy arrays *and* jax arrays/tracers (dispatch on the
 input type), so the same code backs the numpy hardware model, the jitted
@@ -134,10 +136,27 @@ def cumsum_bits(words, n: int):
     """Inclusive per-element rank of the set bits: ``(…, W) -> (…, n) int32``.
 
     ``out[..., j] = sum(bit_0 … bit_j)`` — element ``j``'s 1-based drain rank
-    when its own bit is set.  Dense on purpose: the only consumer is the
-    dense ``out_pos`` scatter."""
+    when its own bit is set.  The rank of bit ``b`` of word ``i`` splits into
+    two in-lane terms:
+
+      * the exclusive prefix of per-word popcounts up to word ``i`` — an
+        O(N/32) scan over words instead of the O(N) boolean scan the dense
+        expansion needed, and
+      * the popcount of word ``i`` masked to bits ``0..b`` (LSB-first lanes),
+        a pure word operation.
+
+    The result is expanded to ``(…, n)`` only because its sole consumer (the
+    drain ``out_pos`` scatter) is element-indexed; all the scanning happens
+    on packed words."""
     xp = _xp(words)
-    return xp.cumsum(unpack_rows(words, n).astype(xp.int32), axis=-1)
+    counts = popcount(words)                               # (…, W)
+    prefix = (xp.cumsum(counts, axis=-1) - counts)         # exclusive, (…, W)
+    # inclusive in-word masks: bits 0..b set, for every lane position b
+    shifts = xp.arange(LANE, dtype=xp.uint32)
+    below = xp.uint32(0xFFFFFFFF) >> (xp.uint32(LANE - 1) - shifts)   # (LANE,)
+    inword = popcount(words[..., None] & below)            # (…, W, LANE)
+    rank = prefix[..., None].astype(xp.int32) + inword
+    return rank.reshape(words.shape[:-1] + (words.shape[-1] * LANE,))[..., :n]
 
 
 def to_bits(values: np.ndarray, w: int) -> np.ndarray:

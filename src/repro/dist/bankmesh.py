@@ -18,6 +18,15 @@ for the collective realization too, :class:`MeshBankPool` telemetry is
 **bit-identical** to the single-process pool (asserted in tests), and the
 backend may freely fall back to one bank when a tile's width does not divide
 the mesh.
+
+Since PR 4 the serving engine drives its pool through the event-driven
+:class:`~repro.sortserve.scheduler.ContinuousScheduler`; `MeshBankPool`
+inherits the whole placement/readiness/drain surface from
+:class:`~repro.sortserve.scheduler.BankPool`, so mesh-backed banks take part
+in continuous admission unchanged — tiles are granted device shard groups
+the moment earlier mesh tiles drain, with no engine-batch flush barrier
+between them (exercised by the ``--mesh`` CLI smoke and
+tests/test_continuous.py).
 """
 
 from __future__ import annotations

@@ -92,6 +92,10 @@ def main(argv=None):
                          "lane-packed hot path (equivalence baseline)")
     ap.add_argument("--static_policy", action="store_true",
                     help="disable measured-EMA routing; static width cap only")
+    ap.add_argument("--legacy_scheduler", action="store_true",
+                    help="batch-synchronous wave scheduler instead of the "
+                         "event-driven continuous core (one release of "
+                         "grace; telemetry parity asserted in tests)")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     args = ap.parse_args(argv)
 
@@ -118,6 +122,7 @@ def main(argv=None):
         interpret=as_flag[args.interpret],
         packed=not args.dense,
         adaptive_policy=not args.static_policy,
+        continuous=not args.legacy_scheduler,
     )
     engine = SortServeEngine(cfg)
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)
@@ -147,6 +152,13 @@ def main(argv=None):
     print(f"scheduler drains: {telem['scheduler']['drains']}  "
           f"oversized waves: {telem['scheduler']['oversized_waves']}  "
           f"mid-wave admissions: {telem['scheduler']['mid_wave_admissions']}")
+    cont = telem["scheduler"].get("continuous")
+    if cont:
+        print(f"event clock: {cont['events']} events  "
+              f"{cont['admissions']} admissions  "
+              f"queue wait {cont['queue_wait_vt']:.0f} cyc  "
+              f"occupancy {cont['occupancy']:.2f}  "
+              f"makespan {cont['makespan_vt']:.0f} cyc")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

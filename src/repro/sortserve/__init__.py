@@ -9,26 +9,33 @@ up, turning the repo's sorting engines into a request-level service:
   * :mod:`batcher`   — pow-2 shape bucketing with sentinel padding in the
     order-preserving sortable-uint32 domain, coalescing requests into fixed
     ``(B, N)`` tiles so jit caches stay warm,
-  * :mod:`scheduler` — bank-pool scheduler modeled on the §IV manager:
+  * :mod:`scheduler` — bank-pool schedulers modeled on the §IV manager:
     per-bank occupancy, OR-combined readiness, drain policy for oversized
-    tiles that shard across banks,
+    tiles that shard across banks; the event-driven
+    :class:`~repro.sortserve.scheduler.ContinuousScheduler` (default) admits
+    tiles the moment banks drain, the legacy wave
+    :class:`~repro.sortserve.scheduler.Scheduler` stays behind
+    ``EngineConfig(continuous=False)``,
   * :mod:`backends`  — pluggable execution backends (colskip, radix_topk,
     jaxsort, numpy oracle) behind a cost-model-driven selection policy,
-  * :mod:`engine`    — the synchronous serving core, an async wrapper, and
-    JSON telemetry (latency, column reads / cycles, bucket hit rates).
+  * :mod:`engine`    — streaming sessions (``begin()/feed()/drain()``), the
+    batch ``submit`` wrapper, the barrier-free async front door, and JSON
+    telemetry (latency, column reads / cycles, bucket hit rates, event-clock
+    admission stats).
 """
 
 from .backends import BACKENDS, CostPolicy, resolve_backends, solve_numpy
 from .batcher import Batcher, Tile, pow2_bucket
-from .engine import AsyncSortServe, EngineConfig, SortServeEngine
+from .engine import AsyncSortServe, EngineConfig, SortServeEngine, SortSession
 from .request import OP_KINDS, SortRequest, SortResponse, encode_payload
-from .scheduler import BankPool, Scheduler
+from .scheduler import BankPool, ContinuousScheduler, Scheduler
 
 __all__ = [
     "AsyncSortServe",
     "BACKENDS",
     "BankPool",
     "Batcher",
+    "ContinuousScheduler",
     "CostPolicy",
     "EngineConfig",
     "OP_KINDS",
@@ -36,6 +43,7 @@ __all__ = [
     "SortRequest",
     "SortResponse",
     "SortServeEngine",
+    "SortSession",
     "Tile",
     "encode_payload",
     "pow2_bucket",

@@ -20,6 +20,14 @@ Keeping the tile menu small and fixed is what keeps the jit caches of the
 jax/Pallas backends warm: every distinct ``(op, B, N, k)`` signature compiles
 once and is then a dictionary hit.  The batcher tracks exactly that —
 ``signature_hits / tiles`` is the bucket hit-rate exported by the engine.
+
+Incremental emission (PR 4): streaming sessions close buckets on **size or
+age**, not only on flush — :meth:`Batcher.take_ready` emits every full tile
+immediately and, given a deadline, closes buckets whose oldest request has
+waited ``max_age_s``.  Timestamps are caller-supplied (the engine's
+injectable clock), so age-based closing is deterministic in tests.  Several
+batchers may share one :class:`BatcherStats` (``stats=``): per-session
+batchers aggregate into the engine's telemetry without sharing buckets.
 """
 
 from __future__ import annotations
@@ -88,16 +96,23 @@ class BatcherStats:
 
 
 class Batcher:
-    """Accumulates requests and flushes them as fixed-shape tiles."""
+    """Accumulates requests and emits them as fixed-shape tiles.
 
-    def __init__(self, tile_rows: int = 8, min_bucket: int = 8):
+    Buckets close three ways: :meth:`flush` closes everything (the batch
+    path), :meth:`take_ready` closes full tiles immediately (size) and —
+    when given ``now``/``max_age_s`` — buckets whose oldest request has
+    aged out (the streaming path)."""
+
+    def __init__(self, tile_rows: int = 8, min_bucket: int = 8, *,
+                 stats: BatcherStats | None = None):
         if tile_rows < 1:
             raise ValueError("tile_rows must be >= 1")
         self.tile_rows = tile_rows
         self.min_bucket = min_bucket
-        self._groups: dict[tuple, list[tuple[SortRequest, np.ndarray]]] = \
-            defaultdict(list)
-        self.stats = BatcherStats()
+        # items are (request, encoded payload, add timestamp); timestamps
+        # are None on the batch path and clock readings on the stream path
+        self._groups: dict[tuple, list] = defaultdict(list)
+        self.stats = stats if stats is not None else BatcherStats()
 
     def bucket_key(self, req: SortRequest) -> tuple:
         n_pad = pow2_bucket(req.n, self.min_bucket)
@@ -109,36 +124,78 @@ class Batcher:
         # policy-routed requests
         return (req.op, n_pad, k_pad, req.backend)
 
-    def add(self, req: SortRequest) -> None:
-        self._groups[self.bucket_key(req)].append((req, encode_payload(req.payload)))
+    def add(self, req: SortRequest, now: float | None = None) -> None:
+        """Bucket a request; ``now`` stamps it for age-based closing."""
+        self._groups[self.bucket_key(req)].append(
+            (req, encode_payload(req.payload), now))
 
     def pending(self) -> int:
         return sum(len(v) for v in self._groups.values())
 
+    def oldest_deadline(self, max_age_s: float) -> float | None:
+        """Earliest instant any open bucket ages out, or None when every
+        pending request is unstamped (or nothing is pending)."""
+        born = [items[0][2] for items in self._groups.values()
+                if items and items[0][2] is not None]
+        return min(born) + max_age_s if born else None
+
+    def _emit(self, key: tuple, chunk: list) -> Tile:
+        """Close one bucket chunk into a tile (shared by flush/take_ready)."""
+        op, n_pad, k, hint = key
+        pad = PAD_DESC if op == "topk" else PAD_ASC
+        data = np.full((self.tile_rows, n_pad), pad, dtype=np.uint32)
+        entries = []
+        for row, (req, enc, _) in enumerate(chunk):
+            data[row, :req.n] = enc
+            entries.append((req, row))
+            self.stats.pad_cols += n_pad - req.n
+            self.stats.real_elems += req.n
+        tile = Tile(op=op, data=data, k=k, entries=entries,
+                    pad_rows=self.tile_rows - len(chunk), hint=hint)
+        self.stats.tiles += 1
+        self.stats.requests += len(chunk)
+        self.stats.pad_rows += tile.pad_rows
+        if tile.signature in self.stats.signatures:
+            self.stats.signature_hits += 1
+        else:
+            self.stats.signatures.add(tile.signature)
+        return tile
+
     def flush(self) -> list[Tile]:
         """Drain all groups into tiles of exactly ``tile_rows`` rows each."""
         tiles: list[Tile] = []
-        for (op, n_pad, k, hint), items in sorted(
-                self._groups.items(), key=lambda kv: (kv[0][0], kv[0][1])):
-            pad = PAD_DESC if op == "topk" else PAD_ASC
+        for key, items in sorted(self._groups.items(),
+                                 key=lambda kv: (kv[0][0], kv[0][1])):
             for i in range(0, len(items), self.tile_rows):
-                chunk = items[i:i + self.tile_rows]
-                data = np.full((self.tile_rows, n_pad), pad, dtype=np.uint32)
-                entries = []
-                for row, (req, enc) in enumerate(chunk):
-                    data[row, :req.n] = enc
-                    entries.append((req, row))
-                    self.stats.pad_cols += n_pad - req.n
-                    self.stats.real_elems += req.n
-                tile = Tile(op=op, data=data, k=k, entries=entries,
-                            pad_rows=self.tile_rows - len(chunk), hint=hint)
-                self.stats.tiles += 1
-                self.stats.requests += len(chunk)
-                self.stats.pad_rows += tile.pad_rows
-                if tile.signature in self.stats.signatures:
-                    self.stats.signature_hits += 1
-                else:
-                    self.stats.signatures.add(tile.signature)
-                tiles.append(tile)
+                tiles.append(self._emit(key, items[i:i + self.tile_rows]))
         self._groups.clear()
+        return tiles
+
+    def take_ready(self, now: float | None = None,
+                   max_age_s: float | None = None) -> list[Tile]:
+        """Incremental emission: close buckets on size or age, keep the rest.
+
+        Every group with at least ``tile_rows`` requests emits its full
+        tiles immediately (the remainder stays open and keeps its original
+        timestamps).  When ``now`` and ``max_age_s`` are given, a group
+        whose *oldest* stamped request has waited ``max_age_s`` closes
+        completely — the streaming latency bound: no request waits for
+        co-batched neighbours longer than the age limit."""
+        tiles: list[Tile] = []
+        for key in sorted(self._groups, key=lambda kv: (kv[0], kv[1])):
+            items = self._groups[key]
+            n_full = len(items) // self.tile_rows * self.tile_rows
+            for i in range(0, n_full, self.tile_rows):
+                tiles.append(self._emit(key, items[i:i + self.tile_rows]))
+            rest = items[n_full:]
+            aged = (rest and max_age_s is not None and now is not None
+                    and rest[0][2] is not None
+                    and now - rest[0][2] >= max_age_s)
+            if aged:
+                tiles.append(self._emit(key, rest))
+                rest = []
+            if rest:
+                self._groups[key] = rest
+            else:
+                del self._groups[key]
         return tiles

@@ -1,23 +1,39 @@
-"""The serving loop: synchronous core, async wrapper, JSON telemetry.
+"""The serving loop: streaming sessions, sync submit, async front door.
 
-``SortServeEngine.submit`` is the whole data path:
+The continuous data path (default since PR 4) is session-shaped:
 
-    requests --encode--> Batcher --(B,N) tiles--> Scheduler(bank pool)
-             --CostPolicy--> backend.run --> scatter rows --> responses
+    session = engine.begin()
+    session.feed(requests)   --encode--> per-session Batcher (closes buckets
+                             on size or age) --tiles--> ContinuousScheduler
+                             (event-clock admission as banks drain)
+                             --CostPolicy--> backend.run --> scatter
+    session.poll()/drain()   --> responses as their tiles retire
 
-Everything is deterministic and synchronous; :class:`AsyncSortServe` adds a
-micro-batching front door (a collector thread + ``concurrent.futures``)
-for callers that submit one request at a time, the way an RPC server would.
+``SortServeEngine.submit`` is retained unchanged for batch callers as a
+thin **feed-then-drain wrapper** over one ephemeral session, with the same
+ingress-validation and telemetry-rollback contract as before; setting
+``EngineConfig.continuous=False`` restores the legacy wave scheduler
+(one release of grace, see ROADMAP).  :class:`AsyncSortServe` feeds a
+long-lived streaming session directly from its collector thread —
+requests no longer wait on a global flush barrier, only on their own
+bucket's size/age closure.
 
-Telemetry is aggregated across ``submit`` calls and exported by
+Everything is deterministic given the injectable ``clock``; the bank-pool
+event clock itself runs in virtual hardware cycles and never sleeps.
+
+Telemetry is aggregated across sessions/submits and exported by
 :meth:`SortServeEngine.telemetry` / :meth:`dump_telemetry`:
 
   * per-request latency (mean / p50 / p95 / max),
   * aggregate column reads and hardware cycles, split exact vs estimated,
   * batcher stats (tiles, padding fractions, jit-signature bucket hit rate),
-  * scheduler stats (per-bank occupancy, drains, oversized waves),
+  * scheduler stats (per-bank occupancy, drains, oversized waves, plus the
+    event-clock section: admissions, queue waits, occupancy, makespan),
   * per-backend request/row counts,
-  * the cost model's throughput for the modeled hardware at each width.
+  * the cost model's throughput for the modeled hardware at each width;
+
+per-session slices of the same quantities come from
+:meth:`SortSession.telemetry`.
 """
 
 from __future__ import annotations
@@ -44,9 +60,9 @@ from .backends import (
 )
 from .batcher import Batcher, Tile
 from .request import SortRequest, SortResponse, decode_values
-from .scheduler import BankPool, Scheduler
+from .scheduler import BankPool, ContinuousScheduler, Scheduler
 
-__all__ = ["AsyncSortServe", "EngineConfig", "SortServeEngine"]
+__all__ = ["AsyncSortServe", "EngineConfig", "SortServeEngine", "SortSession"]
 
 
 @dataclass
@@ -67,6 +83,8 @@ class EngineConfig:
     interpret: bool | None = None   # Pallas interpret mode (None = auto)
     packed: bool = True             # lane-packed masks in the §III machine
     adaptive_policy: bool = True    # measured-EMA routing over the cap prior
+    continuous: bool = True         # event-driven scheduler + sessions;
+                                    # False restores the legacy wave loop
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -121,7 +139,14 @@ class SortServeEngine:
                                  w=self.config.w,
                                  adaptive=self.config.adaptive_policy)
         self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
-        self.scheduler = Scheduler(self.pool)
+        # one persistent scheduler for the engine's lifetime: the event-clock
+        # continuous scheduler by default, the legacy wave loop behind the
+        # config flag (both share the BankPool + telemetry key set)
+        self.scheduler = (ContinuousScheduler(self.pool)
+                          if self.config.continuous else Scheduler(self.pool))
+        # serializes sessions/submits over the shared scheduler + telemetry
+        # (the async front door feeds from its collector thread)
+        self._lock = threading.RLock()
         # per-engine executor hit/miss counts (the cache itself is
         # process-global; per-call warm flags keep attribution correct even
         # with several engines or threads sharing it)
@@ -162,12 +187,11 @@ class SortServeEngine:
             meta=dict(resp.meta) if meta is None else meta, **over)
 
     # ------------------------------------------------------------------ core
-    def submit(self, requests: list[SortRequest]) -> list[SortResponse]:
-        """Serve a batch of requests; responses align with the input order."""
-        t0 = time.perf_counter()
-        # validate at ingress — before any batching — so bad input raises
-        # with the engine untouched and no co-batched work done
-        if len({req.request_id for req in requests}) != len(requests):
+    def _validate_batch(self, requests, prior_ids=frozenset()) -> None:
+        """Ingress validation — before any batching — so bad input raises
+        with the engine untouched and no co-batched work done."""
+        ids = {req.request_id for req in requests}
+        if len(ids) != len(requests) or ids & prior_ids:
             raise ValueError("duplicate request_id in batch; responses are "
                              "matched to requests by id")
         for req in requests:
@@ -186,6 +210,91 @@ class SortServeEngine:
                 raise ValueError(
                     f"request {req.request_id}: no enabled backend serves "
                     f"op {req.op!r}; have {sorted(self.policy.by_name)}")
+
+    def _snapshot_state(self, inline_commits: bool = True) -> dict:
+        """Everything a failed batch must roll back (the executor cache is
+        exempt by design: compiled executables stay warm for retries).
+
+        ``inline_commits`` also snapshots the result cache and latency
+        window — needed on the continuous path, where sessions commit both
+        as tiles retire; the wave path commits them only after success, so
+        it skips that copy."""
+        snap = dict(
+            agg=copy.deepcopy(self._agg),
+            batch=copy.deepcopy(self.batcher.stats),
+            sched=copy.deepcopy(self.scheduler.stats),
+            vt=getattr(self.scheduler, "vt", None),
+            execs=dict(self._exec_stats),
+            banks=[(b.tiles_served, b.rows_served, b.busy_cycles)
+                   for b in self.pool.banks],
+        )
+        if inline_commits:
+            snap["cache"] = self._cache.copy()
+            snap["lat"] = (list(self._latencies), self._lat_sum,
+                           self._lat_count)
+        return snap
+
+    def _restore_state(self, snap: dict) -> None:
+        self._agg = snap["agg"]
+        # stats objects restore IN PLACE: live sessions hold the engine's
+        # BatcherStats by reference (shared aggregation), so reassigning the
+        # attribute would silently orphan their telemetry
+        for obj, saved in ((self.batcher.stats, snap["batch"]),
+                           (self.scheduler.stats, snap["sched"])):
+            for f in dataclasses.fields(saved):
+                setattr(obj, f.name, getattr(saved, f.name))
+        if snap["vt"] is not None:
+            self.scheduler.vt = snap["vt"]
+        self._exec_stats = snap["execs"]
+        for bank, (t, r, c) in zip(self.pool.banks, snap["banks"]):
+            bank.tiles_served, bank.rows_served, bank.busy_cycles = t, r, c
+        if "cache" in snap:
+            self._cache = snap["cache"]
+            lat, lat_sum, lat_count = snap["lat"]
+            self._latencies = deque(lat, maxlen=self._latencies.maxlen)
+            self._lat_sum, self._lat_count = lat_sum, lat_count
+
+    # ------------------------------------------------------------- sessions
+    def begin(self, *, max_age_s: float | None = None,
+              strict: bool = True) -> "SortSession":
+        """Open a streaming session (requires ``continuous=True``).
+
+        ``max_age_s`` bounds how long a request may wait for co-bucketed
+        neighbours (age-based bucket closing in :meth:`SortSession.poll`);
+        ``strict=False`` isolates tile execution failures to their own
+        requests instead of raising (the async front door's mode)."""
+        if not self.config.continuous:
+            raise ValueError(
+                "streaming sessions need the continuous scheduler; this "
+                "engine was built with EngineConfig(continuous=False)")
+        return SortSession(self, max_age_s=max_age_s, strict=strict)
+
+    def submit(self, requests: list[SortRequest]) -> list[SortResponse]:
+        """Serve a batch of requests; responses align with the input order.
+
+        On the continuous path this is a thin feed-then-drain wrapper over
+        one ephemeral session — same validation, same responses, same
+        all-or-nothing telemetry rollback as the wave path."""
+        if not self.config.continuous:
+            return self._submit_waves(requests)
+        with self._lock:
+            self._validate_batch(requests)
+            snap = self._snapshot_state()
+            session = self.begin()
+            try:
+                got = session.feed(requests)
+                got += session.drain()
+            except BaseException:
+                self.scheduler.abort(session)
+                self._restore_state(snap)
+                raise
+            by_id = {resp.request_id: resp for resp in got}
+            return [by_id[req.request_id] for req in requests]
+
+    def _submit_waves(self, requests: list[SortRequest]) -> list[SortResponse]:
+        """The legacy batch-synchronous path (EngineConfig.continuous=False)."""
+        t0 = self._clock()
+        self._validate_batch(requests)
         # result cache: requests whose (payload, op, k, hint) was served
         # before skip batching/execution entirely and are answered from the
         # memo at the end (hit/miss counters only commit on success)
@@ -205,27 +314,17 @@ class SortServeEngine:
         # all telemetry rolls back if the batch fails mid-flight, so a
         # partial execution never inflates counters relative to `requests`
         # (tiles that did run are re-executed if the caller retries)
-        snap_agg = copy.deepcopy(self._agg)
-        snap_batch = copy.deepcopy(self.batcher.stats)
-        snap_sched = copy.deepcopy(self.scheduler.stats)
-        snap_exec = dict(self._exec_stats)
-        snap_banks = [(b.tiles_served, b.rows_served, b.busy_cycles)
-                      for b in self.pool.banks]
+        snap = self._snapshot_state(inline_commits=False)
         try:
             tiles = self.batcher.flush()
             served = self.scheduler.run(tiles, self._execute)
         except BaseException:
-            self._agg = snap_agg
-            self.batcher.stats = snap_batch
-            self.scheduler.stats = snap_sched
-            self._exec_stats = snap_exec
-            for bank, (t, r, c) in zip(self.pool.banks, snap_banks):
-                bank.tiles_served, bank.rows_served, bank.busy_cycles = t, r, c
+            self._restore_state(snap)
             raise
         by_id: dict[int, SortResponse] = {}
-        t1 = time.perf_counter()
+        t1 = self._clock()
         for tile, result in served:
-            for resp in self._scatter(tile, result, t1 - t0):
+            for resp in self._scatter(tile, result, lambda req: t1 - t0):
                 by_id[resp.request_id] = resp
         if use_cache:
             key_by_id = {req.request_id: key for req, key in misses}
@@ -289,7 +388,10 @@ class SortServeEngine:
                 self.policy.modeled_throughput(n, self.config.state_k)
         return result
 
-    def _scatter(self, tile: Tile, result: TileResult, latency_s: float):
+    def _scatter(self, tile: Tile, result: TileResult, lat_fn):
+        """Yield one response per tile entry; ``lat_fn(req)`` supplies the
+        per-request latency (constant on the batch path, feed-to-retire on
+        the streaming path)."""
         for req, row in tile.entries:
             out = req.out_len
             vals_u = np.asarray(result.values[row, :out])
@@ -313,7 +415,7 @@ class SortServeEngine:
                 indices=None if req.op == "sort" else idxs,
                 backend=result.backend,
                 bucket_shape=tile.shape,
-                latency_s=latency_s,
+                latency_s=lat_fn(req),
                 column_reads=(int(result.column_reads[row])
                               if result.column_reads is not None else None),
                 cycles=(int(result.cycles[row])
@@ -381,23 +483,270 @@ class SortServeEngine:
         return telem
 
 
-class AsyncSortServe:
-    """Micro-batching async front door over a synchronous engine.
+class SortSession:
+    """One streaming request stream over the engine's continuous core.
 
-    Requests submitted one at a time are collected for up to
-    ``max_wait_ms`` (or until ``max_batch`` are waiting) and served as one
-    engine batch — the standard continuous-batching trade of a little
-    latency for tile occupancy.
+    Open with :meth:`SortServeEngine.begin`.  The session owns its buckets
+    (a private :class:`Batcher` aggregating into the engine's stats) but
+    shares the engine's bank pool, event clock, result cache, and policy —
+    several sessions admit tiles into the same pool concurrently, exactly
+    like independent datasets occupying §IV banks.
+
+    Delivery contract: every fed request's response is returned **exactly
+    once**, by whichever of :meth:`feed` / :meth:`poll` / :meth:`drain`
+    observes its tile retire.  ``feed`` dispatches buckets the moment they
+    reach ``tile_rows`` (size closure); ``poll`` additionally closes buckets
+    whose oldest request has waited ``max_age_s`` (age closure); ``drain``
+    closes everything.  With ``strict=False`` a tile execution failure is
+    isolated: the tile's requests surface through :meth:`take_failures`
+    instead of raising (the async front door's mode).
+
+    Per-request latency is feed-to-retire on the engine's injectable clock;
+    :meth:`telemetry` reports the session's own latency quantiles plus its
+    slice of the event-clock admission stats.
+    """
+
+    def __init__(self, engine: SortServeEngine, *,
+                 max_age_s: float | None = None, strict: bool = True):
+        self.engine = engine
+        self.max_age_s = max_age_s
+        self.strict = strict
+        self._batcher = Batcher(engine.config.tile_rows,
+                                engine.config.min_bucket,
+                                stats=engine.batcher.stats)
+        # per-request state lives only while a request is in flight: every
+        # map/set below is pruned at retire/failure, so a long-lived
+        # streaming session (the async front door) stays O(in-flight), and
+        # the latency window is bounded like the engine's
+        self._fed_ids: set[int] = set()
+        self._outstanding: set[int] = set()
+        self._keys: dict[int, tuple] = {}       # rid -> result-cache key
+        self._t_fed: dict[int, float] = {}
+        self._out: list[SortResponse] = []      # completed, undelivered
+        self._failures: list[tuple[SortRequest, BaseException, int]] = []
+        self._lat: deque = deque(maxlen=4096)
+        self._stats = {"requests": 0, "completed": 0, "failed": 0,
+                       "cache_hits": 0, "tiles": 0}
+        self._sched0 = copy.deepcopy(engine.scheduler.stats)
+
+    # -------------------------------------------------------------- ingress
+    def feed(self, requests: list[SortRequest], *, flush: bool = False,
+             isolate: bool = False,
+             now: float | None = None) -> list[SortResponse]:
+        """Accept requests into the stream; returns whatever completed.
+
+        Validation (including request-id uniqueness among the session's
+        in-flight requests) happens before any state changes, so a bad
+        request raises with nothing half-fed.  Cache hits complete
+        immediately; misses bucket, and buckets that reach ``tile_rows``
+        dispatch into the event clock right away.  ``flush=True``
+        force-closes every open bucket after this feed; ``isolate=True``
+        bypasses the shared buckets entirely and gives each fed request
+        its own tile (the front door's failure-isolation retry — other
+        callers' open buckets are untouched)."""
+        e = self.engine
+        with e._lock:
+            now = e._clock() if now is None else now
+            e._validate_batch(requests, prior_ids=self._outstanding)
+            use_cache = e.config.cache_size > 0
+            solo: list[SortRequest] = []
+            for req in requests:
+                rid = req.request_id
+                self._stats["requests"] += 1
+                key = e._cache_key(req) if use_cache else None
+                entry = e._cache.get(key) if use_cache else None
+                if entry is not None:
+                    e._cache.move_to_end(key)
+                    e._agg["cache_hits"] += 1
+                    self._stats["cache_hits"] += 1
+                    self._record(e._isolated_response(
+                        entry, request_id=rid, latency_s=0.0,
+                        meta={**entry.meta, "cache_hit": True}), 0.0)
+                    continue
+                if use_cache:
+                    e._agg["cache_misses"] += 1
+                    self._keys[rid] = key
+                self._t_fed[rid] = now
+                self._outstanding.add(rid)
+                if isolate:
+                    solo.append(req)
+                else:
+                    self._batcher.add(req, now)
+            tiles = []
+            for req in solo:                  # one private tile per request
+                lone = Batcher(e.config.tile_rows, e.config.min_bucket,
+                               stats=e.batcher.stats)
+                lone.add(req, now)
+                tiles += lone.flush()
+            tiles += (self._batcher.flush() if flush
+                      else self._batcher.take_ready(now, self.max_age_s))
+            self._dispatch(tiles)
+            return self._take()
+
+    def poll(self, now: float | None = None) -> list[SortResponse]:
+        """Close aged buckets, pump the event clock, return completions."""
+        e = self.engine
+        with e._lock:
+            now = e._clock() if now is None else now
+            self._dispatch(self._batcher.take_ready(now, self.max_age_s))
+            return self._take()
+
+    def drain(self) -> list[SortResponse]:
+        """Close every open bucket and return all remaining responses."""
+        e = self.engine
+        with e._lock:
+            self._dispatch(self._batcher.flush())
+            if self.strict and self._outstanding:
+                raise RuntimeError(
+                    f"{len(self._outstanding)} requests vanished without "
+                    "retiring — scheduler invariant broken")
+            return self._take()
+
+    def take_failures(self) -> list[tuple[SortRequest, BaseException, int]]:
+        """Isolated tile failures (``strict=False``): one entry per failed
+        request as ``(request, exception, co_batched_count)``."""
+        with self.engine._lock:
+            out, self._failures = self._failures, []
+            return out
+
+    def next_deadline(self) -> float | None:
+        """Clock instant the oldest open bucket ages out (None: no bound)."""
+        if self.max_age_s is None:
+            return None
+        with self.engine._lock:
+            return self._batcher.oldest_deadline(self.max_age_s)
+
+    # ------------------------------------------------------------ internals
+    def _dispatch(self, tiles: list[Tile]) -> None:
+        e = self.engine
+        if tiles:
+            self._stats["tiles"] += len(tiles)
+            e.scheduler.feed(tiles, e._execute, sink=self._on_tile,
+                             strict=self.strict, owner=self)
+            e.scheduler.pump()
+
+    def _on_tile(self, tile: Tile, result, exc) -> None:
+        e = self.engine
+        if exc is not None:
+            for req, _ in tile.entries:
+                # a failed request leaves the stream entirely — the front
+                # door may legitimately re-feed it (isolation retry), so
+                # every trace of it is pruned here
+                self._outstanding.discard(req.request_id)
+                self._t_fed.pop(req.request_id, None)
+                self._keys.pop(req.request_id, None)
+                self._stats["failed"] += 1
+                self._failures.append((req, exc, len(tile.entries)))
+            return
+        now = e._clock()
+        use_cache = e.config.cache_size > 0
+        for resp in e._scatter(
+                tile, result,
+                lambda req: now - self._t_fed[req.request_id]):
+            rid = resp.request_id
+            self._outstanding.discard(rid)
+            if use_cache and not resp.meta.get("verify_failed"):
+                key = self._keys.pop(rid, None)
+                if key is not None:
+                    e._cache[key] = e._isolated_response(resp)
+            self._record(resp, resp.latency_s)
+        for req, _ in tile.entries:               # retired: prune stamps
+            self._t_fed.pop(req.request_id, None)
+            self._keys.pop(req.request_id, None)
+        if use_cache:
+            while len(e._cache) > e.config.cache_size:
+                e._cache.popitem(last=False)          # evict LRU
+
+    def _record(self, resp: SortResponse, latency: float) -> None:
+        e = self.engine
+        self._stats["completed"] += 1
+        e._agg["requests"] += 1
+        e._latencies.append(latency)
+        e._lat_sum += latency
+        e._lat_count += 1
+        self._lat.append(latency)
+        self._out.append(resp)
+
+    def _take(self) -> list[SortResponse]:
+        out, self._out = self._out, []
+        return out
+
+    # ------------------------------------------------------------ telemetry
+    def telemetry(self) -> dict:
+        """This session's slice: request/latency stats plus the event-clock
+        deltas (admissions, queue wait, mid-wave grants) since begin()."""
+        e = self.engine
+        with e._lock:
+            lat = np.asarray(self._lat) if self._lat else np.zeros(1)
+            cur, base = e.scheduler.stats, self._sched0
+
+            def delta(name: str):
+                return getattr(cur, name, 0) - getattr(base, name, 0)
+
+            return {
+                **self._stats,
+                "open_bucket_rows": self._batcher.pending(),
+                "in_flight": len(self._outstanding),
+                "latency_s": {
+                    "mean": float(lat.mean()),
+                    "p50": float(np.percentile(lat, 50)),
+                    "p95": float(np.percentile(lat, 95)),
+                    "max": float(lat.max()),
+                },
+                # pool-wide event-clock deltas while this session ran (other
+                # sessions' admissions included — banks are shared, as §IV
+                # banks are)
+                "scheduler_delta": {
+                    "tiles": delta("tiles"),
+                    "drains": delta("drains"),
+                    "mid_wave_admissions": delta("mid_wave_admissions"),
+                    "admissions": delta("admissions"),
+                    "arrivals": delta("arrivals"),
+                    "events": delta("events"),
+                    "queue_wait_vt": delta("queue_wait_vt"),
+                    "busy_bank_vt": delta("busy_bank_vt"),
+                },
+            }
+
+
+class AsyncSortServe:
+    """Streaming async front door: futures in, continuous admission out.
+
+    The collector thread feeds one long-lived :class:`SortSession` directly
+    — there is **no global flush barrier** anywhere on the path.  A request
+    waits only for its own bucket to close (``tile_rows`` co-shaped
+    neighbours, or ``max_wait_ms`` of age, whichever first); its tile is
+    admitted into the bank pool the moment banks drain, and its future
+    resolves when that tile retires — co-arriving requests of other shapes
+    neither delay it nor wait for it.
+
+    ``max_batch`` bounds how many queued requests the collector ingests per
+    iteration before pumping completions.  ``clock`` (default: the engine's
+    clock) drives bucket ages and latency stamps, so streaming behaviour is
+    reproducible in tests without sleeps.
+
+    Tile execution failures are isolated (the session runs ``strict=False``):
+    a request co-bucketed with an offender is retried once in its own tile,
+    so only the true offender's future errors — the same neighbour
+    protection the micro-batching front door had.
     """
 
     _STOP = object()
 
     def __init__(self, engine: SortServeEngine, max_batch: int = 64,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, *, clock=None):
+        if not engine.config.continuous:
+            raise ValueError(
+                "AsyncSortServe streams into the continuous scheduler; "
+                "this engine was built with EngineConfig(continuous=False)")
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
+        self._clock = clock if clock is not None else engine._clock
+        self.session = engine.begin(max_age_s=self.max_wait_s, strict=False)
         self._q: queue.Queue = queue.Queue()
+        self._pending: dict[int, tuple[SortRequest, Future]] = {}
+        self._retried: set[int] = set()
         self._lock = threading.Lock()
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -408,17 +757,19 @@ class AsyncSortServe:
         with self._lock:
             if self._closed:
                 raise RuntimeError("sort service closed")
-            self._q.put((request, fut))
+            # stamp arrival here, on the caller's side of the queue: bucket
+            # age and latency count from submission, not collector pickup
+            self._q.put((request, fut, self._clock()))
         return fut
 
     def close(self) -> None:
-        """Serve everything already queued, then stop the collector.
+        """Serve everything already accepted, then stop the collector.
 
         Idempotent.  The lock orders every ``submit`` before the STOP
-        marker (or fails it), and ``_loop`` serves the queue tail behind
-        STOP before exiting — so every accepted future is resolved and
-        ``submit`` after ``close`` raises instead of enqueueing.
-        """
+        marker (or fails it), and ``_loop`` feeds the queue tail behind
+        STOP and drains the session before exiting — so every accepted
+        future is resolved and ``submit`` after ``close`` raises instead
+        of enqueueing."""
         with self._lock:
             if self._closed:
                 return
@@ -435,57 +786,99 @@ class AsyncSortServe:
         except InvalidStateError:
             pass
 
-    def _serve_batch(self, batch) -> None:
-        batch = [(r, f) for r, f in batch if not f.cancelled()]
-        if not batch:
+    # --------------------------------------------------------- stream plumbing
+    def _feed_one(self, req: SortRequest, fut: Future,
+                  at: float | None = None, isolate: bool = False) -> None:
+        """Feed one request into the session; a validation error fails its
+        future alone (the session state is untouched on validation)."""
+        if req.request_id in self._pending:
+            # fail the newcomer directly: registering it would orphan the
+            # in-flight request's future under the same id
+            self._resolve(fut, exc=ValueError(
+                f"request_id {req.request_id} already in flight"))
             return
-        reqs = [r for r, _ in batch]
+        self._pending[req.request_id] = (req, fut)
         try:
-            resps = self.engine.submit(reqs)
-        except Exception as e:
-            if len(batch) == 1:
-                self._resolve(batch[0][1], exc=e)
-                return
-            # requests from independent callers are co-batched here; one bad
-            # request must not fail its neighbours — retry them one by one so
-            # only the offender's future errors
-            for item in batch:
-                self._serve_batch([item])
+            done = self.session.feed(
+                [req], isolate=isolate,
+                now=self._clock() if at is None else at)
+        except Exception as exc:
+            self._pending.pop(req.request_id, None)
+            self._resolve(fut, exc=exc)
             return
-        for (_, fut), resp in zip(batch, resps):
-            self._resolve(fut, resp)
+        self._deliver(done)
+
+    def _deliver(self, responses: list[SortResponse]) -> None:
+        for resp in responses:
+            item = self._pending.pop(resp.request_id, None)
+            if item is not None:
+                self._retried.discard(resp.request_id)
+                self._resolve(item[1], resp)
+        for req, exc, co_batched in self.session.take_failures():
+            rid = req.request_id
+            item = self._pending.get(rid)
+            if item is None:
+                continue
+            if co_batched > 1 and rid not in self._retried:
+                # the failure may belong to a co-bucketed neighbour: retry
+                # in a private tile (isolate=True) so only the true
+                # offender's future errors and no open bucket closes early
+                self._retried.add(rid)
+                self._pending.pop(rid)
+                self._feed_one(req, item[1], isolate=True)
+            else:
+                self._pending.pop(rid)
+                self._retried.discard(rid)
+                self._resolve(item[1], exc=exc)
+
+    def _pump(self) -> None:
+        self._deliver(self.session.poll(self._clock()))
 
     def _loop(self) -> None:
         stop = False
         while not stop:
-            item = self._q.get()
-            if item is self._STOP:
-                stop = True
+            deadline = self.session.next_deadline()
+            if deadline is None:
+                timeout = None                 # nothing aging: block for work
             else:
-                batch = [item]
-                deadline = time.perf_counter() + self.max_wait_s
-                while len(batch) < self.max_batch:
-                    timeout = deadline - time.perf_counter()
-                    if timeout <= 0:
-                        break
-                    try:
-                        nxt = self._q.get(timeout=timeout)
-                    except queue.Empty:
-                        break
-                    if nxt is self._STOP:
-                        stop = True
-                        break
-                    batch.append(nxt)
-                self._serve_batch(batch)
-        # STOP seen: drain whatever was already queued behind it so no
-        # accepted request leaves its future unresolved
-        tail = []
+                # a fake clock does not advance while we block, so floor the
+                # real wait instead of busy-spinning until the test ticks it
+                timeout = max(min(deadline - self._clock(), self.max_wait_s),
+                              1e-3)
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            ingested = 0
+            while item is not None:
+                if item is self._STOP:
+                    stop = True
+                    break
+                req, fut, at = item
+                if not fut.cancelled():
+                    self._feed_one(req, fut, at)
+                ingested += 1
+                if ingested >= self.max_batch:
+                    break
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._pump()
+        # STOP seen: feed whatever was already queued behind it, then drain
+        # the session so no accepted request leaves its future unresolved
         while True:
             try:
-                nxt = self._q.get_nowait()
+                item = self._q.get_nowait()
             except queue.Empty:
                 break
-            if nxt is not self._STOP:
-                tail.append(nxt)
-        if tail:
-            self._serve_batch(tail)
+            if item is self._STOP:
+                continue
+            req, fut, at = item
+            if not fut.cancelled():
+                self._feed_one(req, fut, at)
+        self._deliver(self.session.drain())
+        for rid, (req, fut) in list(self._pending.items()):
+            self._pending.pop(rid)
+            self._resolve(fut, exc=RuntimeError(
+                f"request {rid} left unserved at close"))

@@ -34,16 +34,49 @@ Cycle accounting: all banks in a shard group step their column registers
 together (CR enables are OR-combined), so a tile's simulated cycle count is
 charged to *every* bank in its group — matching §V.C's result that
 multi-bank management changes area/power, never latency.
+
+Continuous operation (PR 4)
+---------------------------
+
+:class:`Scheduler` above runs the pool in lock-step waves: every batch is a
+global flush barrier, and banks freed by a short tile idle until the whole
+batch retires.  :class:`ContinuousScheduler` replaces the wave loop with an
+explicit **event clock** — a virtual-time heap of tile-arrival, bank-drain
+(early-release), and tile-retire events, with durations in modeled hardware
+cycles:
+
+  * a tile is *admitted* (placed + executed) the moment enough banks have
+    drained — at its arrival event if the pool has room, otherwise at the
+    first early-release/retire event that frees its shard group;
+  * an oversized tile's partial final wave schedules an early-release event
+    one wave before its retire event, so the PR-3 mid-wave admission is now
+    just the general admission rule rather than a special case;
+  * queued tiles admit FIFO with best-effort skip-scan (a tile that does not
+    fit never blocks a later one that does — the same policy the mid-wave
+    backfill used), and every retire frees banks for the queue immediately,
+    with **no epoch boundary** between batches.
+
+Virtual time is the §V cycle domain: a tile's service duration per wave is
+its summed exact cycle telemetry (falling back to the §V cost-model estimate
+for backends that do not simulate cycles), so queue waits, latencies, and
+occupancy read directly as modeled-hardware quantities and the whole event
+loop is deterministic — no wall-clock sleeps anywhere.  Values, order, CR,
+and cycle telemetry are bit-identical to the wave scheduler for any given
+tile (execution is the same callback); what changes is *when* banks are
+granted, which the ``continuous`` telemetry section reports.
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
 from dataclasses import dataclass, field
 from typing import Callable
 
 from .batcher import Tile
 
-__all__ = ["BankPool", "LogicalBank", "Scheduler", "SchedulerStats"]
+__all__ = ["BankPool", "ContinuousScheduler", "ContinuousStats",
+           "LogicalBank", "Scheduler", "SchedulerStats"]
 
 
 @dataclass
@@ -291,4 +324,331 @@ class Scheduler:
                  "rows_served": b.rows_served, "busy_cycles": b.busy_cycles}
                 for b in self.pool.banks
             ],
+        }
+
+
+# --------------------------------------------------------------------------
+# Continuous (event-driven) operation
+# --------------------------------------------------------------------------
+
+@dataclass
+class ContinuousStats(SchedulerStats):
+    """Wave-scheduler counters plus the event-clock quantities.
+
+    ``drains`` is redefined the natural continuous way: every retire *is* a
+    drain event (there are no batch flushes to count).  Virtual-time fields
+    are in modeled hardware cycles."""
+
+    arrivals: int = 0
+    admissions: int = 0             # == tiles; kept for symmetry with queue
+    events: int = 0                 # heap events processed
+    exec_failures: int = 0          # failed tile executions (either mode)
+    queued_peak: int = 0
+    queue_wait_vt: float = 0.0      # sum over admitted tiles of admit - arrive
+    busy_bank_vt: float = 0.0       # integral of bank-busy virtual time
+    makespan_vt: float = 0.0        # vt of the latest retire
+
+
+_ARRIVE, _EARLY, _RETIRE = 0, 1, 2
+
+
+@dataclass(eq=False)                    # identity semantics: jobs are removed
+class _Job:                             # from lists and compared by object
+    """One tile travelling through the event loop."""
+
+    tile: Tile
+    execute: Callable[[Tile], object]
+    sink: Callable | None           # sink(tile, result, exc) at retire/failure
+    strict: bool                    # True: execute errors propagate (+ abort)
+    owner: object                   # abort()/session scope token
+    arrive_vt: float
+    cancelled: bool = False
+
+
+@dataclass(eq=False)                    # identity semantics (see _Job)
+class _Flight:
+    """An admitted tile: its placement plus scheduled event bookkeeping."""
+
+    job: _Job
+    placement: _Placement
+    result: object
+    total_cycles: int | None        # exact cycles for pool telemetry credit
+    duration_vt: float              # per-wave virtual service time
+    cancelled: bool = False
+
+
+class ContinuousScheduler:
+    """Event-driven bank scheduler: admission the moment banks drain.
+
+    The persistent replacement for :meth:`Scheduler.run`'s wave loop (see
+    module docstring).  Tiles are fed at any time (:meth:`feed`), optionally
+    with explicit virtual arrival times; :meth:`pump` advances the event
+    clock until every scheduled event has fired.  Execution happens at
+    admission (software results are available immediately); bank occupancy,
+    queue waits, and latency follow the virtual clock in modeled hardware
+    cycles, so the whole loop is deterministic and sleep-free.
+
+    ``sink(tile, result, exc)`` is called once per tile at its retire event
+    (or at its failure, with ``exc`` set, when fed with ``strict=False``).
+    ``owner`` scopes :meth:`abort`: a failed engine batch can evict exactly
+    its own tiles — queued and in-flight — without touching co-resident
+    streaming sessions.
+
+    :meth:`run` keeps the wave scheduler's call shape (feed everything now,
+    pump to quiescence, return ``(tile, result)`` pairs) so flushed
+    workloads go through the identical admission machinery the streaming
+    path uses — the parity tests drive both schedulers through it.
+    """
+
+    def __init__(self, pool: BankPool):
+        self.pool = pool
+        self.stats = ContinuousStats()
+        self.vt = 0.0                       # the event clock (virtual cycles)
+        self._heap: list = []               # (t, seq, kind, payload)
+        self._seq = itertools.count()
+        self._ids = itertools.count()
+        self._queue: list[_Job] = []        # FIFO, skip-scan admitted
+        self._inflight: list[_Flight] = []
+
+    # ------------------------------------------------------------- ingress
+    def feed(self, tiles, execute: Callable[[Tile], object], sink=None, *,
+             at: float | None = None, strict: bool = True,
+             owner: object = None) -> None:
+        """Schedule arrival events for ``tiles`` (no admission happens yet —
+        call :meth:`pump`).  ``at`` is a virtual arrival time; ``None``
+        means "now" (the current event clock)."""
+        bank_rows = self.pool.banks[0].bank_rows
+        for tile in tiles:
+            if tile.shape[0] > bank_rows:
+                raise ValueError(
+                    f"tile {tile.shape} cannot be placed even on an "
+                    f"idle pool: need bank_rows >= {tile.shape[0]} "
+                    f"(have {bank_rows})")
+            t = self.vt if at is None else float(at)
+            job = _Job(tile, execute, sink, strict, owner, t)
+            heapq.heappush(self._heap, (t, next(self._seq), _ARRIVE, job))
+
+    # ---------------------------------------------------------- event loop
+    def pump(self) -> int:
+        """Fire events in virtual-time order until the heap is empty.
+
+        Returns the number of events processed.  Raises the execute
+        exception of a ``strict`` tile (after releasing its banks); a
+        non-strict tile's failure goes to its sink instead."""
+        fired = 0
+        while self._heap or self._queue:
+            if not self._heap:
+                # quiescent heap with a residual queue: the pool is idle (a
+                # busy pool implies a pending retire event), so either the
+                # queue admits now — scheduling fresh events — or its head
+                # can never fit and _drain_queue raises
+                self._drain_queue(mid_wave=False)
+                continue
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if payload.cancelled:
+                continue
+            self.vt = max(self.vt, t)
+            fired += 1
+            self.stats.events += 1
+            if kind == _ARRIVE:
+                self.stats.arrivals += 1
+                payload.arrive_vt = max(payload.arrive_vt, self.vt)
+                if self._queue or not self._try_admit(payload):
+                    self._queue.append(payload)
+                    self.stats.queued_peak = max(self.stats.queued_peak,
+                                                 len(self._queue))
+            elif kind == _EARLY:
+                pl = payload.placement
+                self.pool.release_early(pl, payload.total_cycles)
+                self.stats.busy_bank_vt += (payload.duration_vt
+                                            * (pl.waves - 1)
+                                            * len(pl.early_banks))
+                self._drain_queue(mid_wave=True)
+            else:                                          # _RETIRE
+                fl = payload
+                pl = fl.placement
+                banks_left = (pl.tail_banks if pl.early_released
+                              else pl.bank_ids)
+                self.pool.retire(pl, fl.total_cycles)
+                self.stats.busy_bank_vt += (fl.duration_vt * pl.waves
+                                            * len(banks_left))
+                self.stats.drains += 1
+                self.stats.makespan_vt = max(self.stats.makespan_vt, self.vt)
+                self._inflight.remove(fl)
+                if fl.job.sink is not None:
+                    fl.job.sink(fl.job.tile, fl.result, None)
+                self._drain_queue(mid_wave=False)
+        return fired
+
+    # ----------------------------------------------------------- admission
+    def _try_admit(self, job: _Job) -> bool:
+        pl = self.pool.try_place(job.tile, next(self._ids))
+        if pl is None:
+            return False
+        self.stats.tiles += 1
+        self.stats.admissions += 1
+        self.stats.queue_wait_vt += self.vt - job.arrive_vt
+        if pl.waves > 1:
+            self.stats.oversized_tiles += 1
+            self.stats.oversized_waves += pl.waves
+        in_flight = sum(1 for b in self.pool.banks if b.loaded)
+        self.stats.max_banks_in_flight = max(
+            self.stats.max_banks_in_flight, in_flight)
+        try:
+            result = job.execute(job.tile)
+        except BaseException as exc:
+            b_rows = job.tile.shape[0]
+            for i in pl.bank_ids:               # no telemetry credit
+                bank = self.pool.banks[i]
+                if pl.tile_id in bank.loaded:
+                    bank.release(pl.tile_id, b_rows)
+            self.stats.exec_failures += 1
+            # the sink hears about the failure in BOTH modes, so a session's
+            # bookkeeping stays coherent (requests leave the outstanding set
+            # and can be re-fed) even when the exception propagates
+            if job.sink is not None:
+                job.sink(job.tile, None, exc)
+            if job.strict:
+                raise
+            return True                         # consumed, not re-queued
+        cycles = getattr(result, "cycles", None)
+        total = int(cycles.sum()) if cycles is not None else None
+        dur = float(total) if total is not None else float(
+            getattr(result, "estimated_cycles", None) or 0.0)
+        fl = _Flight(job, pl, result, total, dur)
+        self._inflight.append(fl)
+        if pl.waves > 1 and pl.early_banks:
+            heapq.heappush(self._heap, (self.vt + dur * (pl.waves - 1),
+                                        next(self._seq), _EARLY, fl))
+        heapq.heappush(self._heap, (self.vt + dur * pl.waves,
+                                    next(self._seq), _RETIRE, fl))
+        return True
+
+    def _drain_queue(self, mid_wave: bool) -> None:
+        """Admit queued tiles FIFO with best-effort skip-scan.
+
+        An oversized head (wider than the whole pool) holds the door: it
+        needs the pool fully idle, and admitting later tiles around it
+        forever would starve it — so nothing behind it is admitted until it
+        places, the continuous analogue of the wave scheduler's forced
+        drain-until-fit.  A merely-large (but poolable) head is retried
+        first at every drain event, so it admits as soon as its shard group
+        frees; skip-scan behind it trades strict FIFO for bank utilization,
+        the usual continuous-batching compromise."""
+        progress = True
+        while progress:
+            progress = False
+            i = 0
+            while i < len(self._queue):
+                job = self._queue[i]
+                if job.cancelled:
+                    self._queue.pop(i)
+                    continue
+                try:
+                    admitted = self._try_admit(job)
+                except BaseException:
+                    # a strict execute failure consumed the job (its sink
+                    # was told); leaving it queued would re-execute it on
+                    # the next pump
+                    self._queue.pop(i)
+                    raise
+                if admitted:
+                    self._queue.pop(i)
+                    if mid_wave:
+                        self.stats.mid_wave_admissions += 1
+                    progress = True
+                    continue
+                if self.pool.shards_for(job.tile.shape[1]) > \
+                        len(self.pool.banks):
+                    break                       # hold the door (see above)
+                i += 1
+        # progress invariant: feed() rejects tiles taller than a bank, and
+        # any feed-accepted tile places on a fully idle pool (oversized
+        # widths via the wave path) — so a stalled queue implies busy banks,
+        # i.e. a pending retire event that will call back here
+        assert not self._queue or self.pool.any_pending(), \
+            "queue stalled on an idle pool despite feed-time validation"
+
+    # ------------------------------------------------------------- control
+    def abort(self, owner: object) -> None:
+        """Evict every queued and in-flight tile fed under ``owner``.
+
+        Banks are released with no telemetry credit; pending events for the
+        evicted tiles — arrivals not yet processed included — are cancelled
+        in place (lazy heap deletion).  Tiles of other owners are untouched
+        — a failed engine batch must not poison co-resident streaming
+        sessions."""
+        for _, _, kind, payload in self._heap:
+            if kind == _ARRIVE and payload.owner is owner:
+                payload.cancelled = True
+        for job in self._queue:
+            if job.owner is owner:
+                job.cancelled = True
+        self._queue = [j for j in self._queue if not j.cancelled]
+        for fl in list(self._inflight):
+            if fl.job.owner is not owner:
+                continue
+            fl.cancelled = True
+            b_rows = fl.job.tile.shape[0]
+            for i in fl.placement.bank_ids:
+                bank = self.pool.banks[i]
+                if fl.placement.tile_id in bank.loaded:
+                    bank.release(fl.placement.tile_id, b_rows)
+            self._inflight.remove(fl)
+
+    def idle(self) -> bool:
+        """True when no event, queued tile, or in-flight tile remains."""
+        return not (self._heap or self._queue or self._inflight)
+
+    # --------------------------------------------- wave-compatible frontend
+    def run(self, tiles: list[Tile],
+            execute: Callable[[Tile], object]) -> list[tuple[Tile, object]]:
+        """Flushed-workload frontend: feed everything now, pump to
+        quiescence, return ``(tile, result)`` in retire order — the same
+        call shape as :meth:`Scheduler.run`, through the identical
+        event-clock admission path the streaming API uses."""
+        results: list[tuple[Tile, object]] = []
+        token = object()
+        try:
+            self.feed(tiles, execute,
+                      sink=lambda tile, result, exc:
+                          results.append((tile, result)),
+                      strict=True, owner=token)
+            self.pump()
+        except BaseException:
+            self.abort(token)
+            raise
+        if not self._inflight:
+            assert not self.pool.any_pending(), \
+                "banks left loaded after quiescence"
+        return results
+
+    def telemetry(self) -> dict:
+        s = self.stats
+        banks = len(self.pool.banks)
+        occupancy = (s.busy_bank_vt / (banks * s.makespan_vt)
+                     if s.makespan_vt > 0 else 0.0)
+        return {
+            "tiles": s.tiles,
+            "drains": s.drains,
+            "oversized_tiles": s.oversized_tiles,
+            "oversized_waves": s.oversized_waves,
+            "max_banks_in_flight": s.max_banks_in_flight,
+            "mid_wave_admissions": s.mid_wave_admissions,
+            "banks": [
+                {"index": b.index, "tiles_served": b.tiles_served,
+                 "rows_served": b.rows_served, "busy_cycles": b.busy_cycles}
+                for b in self.pool.banks
+            ],
+            "continuous": {
+                "arrivals": s.arrivals,
+                "admissions": s.admissions,
+                "events": s.events,
+                "exec_failures": s.exec_failures,
+                "queued_peak": s.queued_peak,
+                "queue_wait_vt": s.queue_wait_vt,
+                "busy_bank_vt": s.busy_bank_vt,
+                "makespan_vt": s.makespan_vt,
+                "occupancy": occupancy,
+            },
         }

@@ -1,0 +1,522 @@
+"""Continuous serving core: event-clock scheduler, sessions, async streaming.
+
+The PR-4 acceptance surface:
+
+  * **parity** — a flushed (all-at-once) workload served by the continuous
+    engine is bit-identical to the legacy wave engine on values, order
+    (indices), CR, and cycle telemetry, per request and in aggregate, and
+    bank-cycle accounting is conserved across the two schedulers;
+  * **arrival patterns** — bursty / trickle / mixed-width streams through
+    the session API match the numpy oracle and conserve bank cycles;
+  * **event clock** — admissions happen at drain/early-release events, the
+    legacy mid-wave case included, all in deterministic virtual time;
+  * **clock injection** — age-based bucket closing and the async front door
+    are reproducible with a fake clock, no sleeps anywhere.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.launch.sortserve import check_against_oracle, make_workload
+from repro.sortserve import (
+    AsyncSortServe,
+    BankPool,
+    Batcher,
+    ContinuousScheduler,
+    EngineConfig,
+    Scheduler,
+    SortRequest,
+    SortServeEngine,
+)
+from repro.sortserve.batcher import Tile
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def make_engine(continuous=True, clock=None, **over):
+    cfg = dict(backends=("colskip", "radix_topk", "jaxsort", "numpy"),
+               tile_rows=4, min_bucket=8, banks=4, bank_width=64,
+               bank_rows=4, sim_width_cap=128, cache_size=0,
+               adaptive_policy=False, continuous=continuous)
+    cfg.update(over)
+    return SortServeEngine(EngineConfig(**cfg), clock=clock)
+
+
+def _raw_tile(n_cols: int, rows: int = 4, fill: int = 0):
+    return Tile(op="sort",
+                data=np.full((rows, n_cols), fill, np.uint32), k=None,
+                entries=[], pad_rows=rows)
+
+
+class CountingExec:
+    def __init__(self, cycles: int = 10):
+        self.calls = []
+        self.cycles = cycles
+
+    def __call__(self, tile):
+        self.calls.append(tile.shape)
+        return type("R", (), {"cycles": np.full(tile.shape[0],
+                                                self.cycles)})()
+
+
+def _bank_totals(engine) -> tuple[int, int, int]:
+    t = engine.telemetry()["scheduler"]["banks"]
+    return (sum(b["tiles_served"] for b in t),
+            sum(b["rows_served"] for b in t),
+            sum(b["busy_cycles"] for b in t))
+
+
+# ----------------------------------------------------------------- parity
+def test_flushed_workload_parity_with_wave_scheduler():
+    """Acceptance: a flushed workload through the continuous engine matches
+    the legacy wave engine bit-exactly on values, order, CR, and cycles —
+    per request and in aggregate — and conserves bank-cycle accounting."""
+    reqs = make_workload(40, min_len=8, max_len=128, seed=21)
+    cont, wave = make_engine(True), make_engine(False)
+    # identical request objects through both engines (payloads are read-only
+    # for the engine; ids match so responses pair up exactly)
+    got_c = cont.submit(reqs)
+    got_w = wave.submit(reqs)
+    for rc, rw in zip(got_c, got_w):
+        assert rc.request_id == rw.request_id
+        assert rc.backend == rw.backend
+        assert rc.cycles == rw.cycles
+        assert rc.column_reads == rw.column_reads
+        assert rc.bucket_shape == rw.bucket_shape
+        if rc.values is not None or rw.values is not None:
+            assert np.array_equal(rc.values, rw.values)
+        if rc.indices is not None or rw.indices is not None:
+            assert np.array_equal(rc.indices, rw.indices)
+    tc, tw = cont.telemetry(), wave.telemetry()
+    assert tc["column_reads"] == tw["column_reads"]
+    assert tc["cycles_exact"] == tw["cycles_exact"]
+    assert tc["cycles_estimated"] == tw["cycles_estimated"]
+    assert tc["scheduler"]["tiles"] == tw["scheduler"]["tiles"]
+    # conservation: both schedulers charge every tile cycles x waves to each
+    # bank of its shard group, so pool-wide totals agree even though *which*
+    # bank served which tile may differ
+    assert _bank_totals(cont) == _bank_totals(wave)
+    assert all(b.free_rows == b.bank_rows for b in cont.pool.banks)
+
+
+def test_scheduler_level_parity_preloaded_queue():
+    """ContinuousScheduler.run on a preloaded queue reproduces the wave
+    scheduler's per-tile results and conserves bank-cycle totals."""
+    widths = [128, 32, 64, 256, 32, 128, 64]
+    ex_c, ex_w = CountingExec(), CountingExec()
+    pool_c = BankPool(banks=3, bank_width=32, bank_rows=4)
+    pool_w = BankPool(banks=3, bank_width=32, bank_rows=4)
+    res_c = ContinuousScheduler(pool_c).run([_raw_tile(w) for w in widths],
+                                            ex_c)
+    res_w = Scheduler(pool_w).run([_raw_tile(w) for w in widths], ex_w)
+    assert sorted(t.shape for t, _ in res_c) == sorted(t.shape
+                                                       for t, _ in res_w)
+    assert sorted(ex_c.calls) == sorted(ex_w.calls)     # same work executed
+    for pool in (pool_c, pool_w):
+        assert all(b.free_rows == b.bank_rows for b in pool.banks)
+    total = lambda pool: sum(b.busy_cycles for b in pool.banks)
+    assert total(pool_c) == total(pool_w)
+    served = lambda pool: (sum(b.tiles_served for b in pool.banks),
+                           sum(b.rows_served for b in pool.banks))
+    assert served(pool_c) == served(pool_w)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999),
+       pattern=st.sampled_from(["bursty", "trickle", "mixed"]),
+       n_req=st.integers(4, 20))
+def test_property_arrival_patterns_match_oracle_and_conserve(seed, pattern,
+                                                             n_req):
+    """Hypothesis sweep: bursty / trickle / mixed-width arrival streams
+    through the session API equal the oracle response-for-response, and
+    bank-cycle accounting matches a legacy engine fed the same chunks."""
+    rng = np.random.default_rng(seed)
+    reqs = make_workload(n_req, min_len=4,
+                         max_len=48 if pattern != "mixed" else 160,
+                         seed=seed)
+    if pattern == "bursty":
+        cuts = sorted(rng.integers(0, n_req, size=2))
+    elif pattern == "trickle":
+        cuts = list(range(1, n_req))
+    else:
+        cuts = sorted(rng.integers(0, n_req,
+                                   size=int(rng.integers(0, 4))))
+    chunks, prev = [], 0
+    for c in list(cuts) + [n_req]:
+        if c > prev:
+            chunks.append(reqs[prev:c])
+            prev = c
+    clock = FakeClock()
+    cont = make_engine(True, clock=clock)
+    wave = make_engine(False)
+    session = cont.begin()
+    got = []
+    for chunk in chunks:
+        got += session.feed(chunk, flush=True, now=clock.tick(0.001))
+        wave.submit(chunk)
+    got += session.drain()
+    assert len(got) == n_req
+    by_id = {r.request_id: r for r in got}
+    for req in reqs:
+        assert check_against_oracle(req, by_id[req.request_id]), \
+            (pattern, req.op, req.n)
+    # conservation of bank-cycle accounting vs the wave engine on the same
+    # chunk boundaries (same tiles -> same totals, different admission times)
+    assert _bank_totals(cont) == _bank_totals(wave)
+    assert all(b.free_rows == b.bank_rows for b in cont.pool.banks)
+
+
+# ------------------------------------------------------------- event clock
+def test_admission_at_drain_event_not_epoch_boundary():
+    """A tile arriving while the pool is full is admitted at the first
+    retire event — virtual time shows it never waited for a batch flush."""
+    pool = BankPool(banks=2, bank_width=64, bank_rows=4)
+    cs = ContinuousScheduler(pool)
+    retired = []
+    ex = CountingExec()
+    cs.feed([_raw_tile(128)], ex,
+            sink=lambda t, r, e: retired.append((t.shape, cs.vt)), at=0.0)
+    cs.feed([_raw_tile(128)], ex,
+            sink=lambda t, r, e: retired.append((t.shape, cs.vt)), at=5.0)
+    cs.pump()
+    # first tile: 2 shards x 40 cycles, retires at vt=40; the second was
+    # queued at vt=5 and admitted at the drain event, retiring at vt=80
+    assert retired == [((4, 128), 40.0), ((4, 128), 80.0)]
+    assert cs.stats.queue_wait_vt == 35.0
+    assert cs.telemetry()["continuous"]["makespan_vt"] == 80.0
+
+
+def test_mid_wave_admission_is_the_general_case():
+    """The PR-3 scenario through the event clock: banks an oversized tile's
+    partial final wave never needs free at the early-release event, and the
+    queued tile is admitted there — identical bank accounting to the wave
+    scheduler's special-cased path."""
+    pool = BankPool(banks=3, bank_width=32, bank_rows=4)
+    cs = ContinuousScheduler(pool)
+    res = cs.run([_raw_tile(128), _raw_tile(32)], CountingExec())
+    assert len(res) == 2
+    telem = cs.telemetry()
+    assert telem["oversized_waves"] == 2
+    assert telem["mid_wave_admissions"] == 1
+    assert [b["busy_cycles"] for b in telem["banks"]] == [80, 80, 40]
+    assert all(b.free_rows == b.bank_rows for b in pool.banks)
+
+
+def test_oversized_head_holds_the_door():
+    """An oversized queue head (needs the whole pool) is not starved by
+    later tiles that would fit the crumbs: nothing behind it is admitted
+    until the pool drains idle and it places."""
+    pool = BankPool(banks=2, bank_width=32, bank_rows=4)
+    cs = ContinuousScheduler(pool)
+    order = []
+    ex = CountingExec()
+    sink = lambda t, r, e: order.append(t.shape[1])
+    cs.feed([_raw_tile(32)], ex, sink=sink, at=0.0)     # occupies 1 bank
+    cs.feed([_raw_tile(256)], ex, sink=sink, at=1.0)    # oversized: 8 shards
+    cs.feed([_raw_tile(32)], ex, sink=sink, at=2.0)     # would fit bank 2 now
+    cs.pump()
+    assert order == [32, 256, 32]
+    assert cs.stats.oversized_waves == 4
+
+
+def test_unplaceable_tile_raises_like_wave_scheduler():
+    pool = BankPool(banks=2, bank_width=64, bank_rows=2)
+    cs = ContinuousScheduler(pool)
+    with pytest.raises(ValueError, match="bank_rows"):
+        cs.run([_raw_tile(16, rows=4)], CountingExec())
+    # via the queue as well: a fitting tile first, then an impossible one
+    pool2 = BankPool(banks=2, bank_width=32, bank_rows=4)
+    cs2 = ContinuousScheduler(pool2)
+    with pytest.raises(ValueError, match="bank_rows"):
+        cs2.run([_raw_tile(32, rows=4), _raw_tile(32, rows=8)],
+                CountingExec())
+
+
+def test_abort_is_owner_scoped():
+    """abort(owner) evicts exactly that owner's queued + in-flight tiles;
+    a co-resident owner's tiles keep their banks and retire normally."""
+    pool = BankPool(banks=2, bank_width=64, bank_rows=4)
+    cs = ContinuousScheduler(pool)
+    mine, theirs = object(), object()
+    done = []
+    ex = CountingExec()
+    cs.feed([_raw_tile(64)], ex, sink=lambda t, r, e: done.append("theirs"),
+            owner=theirs, at=0.0)
+    cs.feed([_raw_tile(128)], ex, sink=lambda t, r, e: done.append("mine"),
+            owner=mine, at=0.0)          # queued: needs both banks
+    cs.abort(mine)
+    cs.pump()
+    assert done == ["theirs"]
+    assert all(b.free_rows == b.bank_rows for b in pool.banks)
+
+
+# ---------------------------------------------------------------- sessions
+def test_session_size_and_age_closure_with_fake_clock():
+    clock = FakeClock()
+    eng = make_engine(True, clock=clock)
+    s = eng.begin(max_age_s=0.01)
+    same = [SortRequest("sort", np.arange(16, dtype=np.uint32) + i)
+            for i in range(4)]
+    done = s.feed(same)                       # bucket reaches tile_rows
+    assert len(done) == 4
+    assert all(r.bucket_shape == (4, 16) for r in done)
+    straggler = SortRequest("sort", np.arange(32, dtype=np.uint32))
+    assert s.feed([straggler]) == []
+    assert s.poll() == []                     # young bucket stays open
+    deadline = s.next_deadline()
+    assert deadline is not None and deadline > clock()
+    clock.tick(0.02)
+    got = s.poll()
+    assert [r.request_id for r in got] == [straggler.request_id]
+    assert got[0].latency_s == pytest.approx(0.02)
+    assert s.drain() == []
+    telem = s.telemetry()
+    assert telem["requests"] == 5 and telem["completed"] == 5
+    assert telem["tiles"] == 2
+    assert telem["scheduler_delta"]["admissions"] == 2
+    assert check_against_oracle(straggler, got[0])
+
+
+def test_session_results_align_and_latency_is_per_request():
+    """Responses are delivered exactly once, and a request's latency spans
+    feed -> retire (not the whole stream)."""
+    clock = FakeClock()
+    eng = make_engine(True, clock=clock)
+    s = eng.begin()
+    a = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    b = SortRequest("topk", np.arange(64, dtype=np.uint32), k=4)
+    got = s.feed([a], flush=True, now=clock.tick(0.0))
+    clock.tick(1.0)
+    got += s.feed([b], flush=True, now=clock())
+    got += s.drain()
+    by_id = {r.request_id: r for r in got}
+    assert set(by_id) == {a.request_id, b.request_id}
+    # b's latency does not include the second it spent not existing
+    assert by_id[b.request_id].latency_s < 0.5
+    assert check_against_oracle(a, by_id[a.request_id])
+    assert check_against_oracle(b, by_id[b.request_id])
+
+
+def test_session_duplicate_ids_rejected_while_in_flight():
+    """A request id can only be in flight once (responses are matched by
+    id); after it retires the id may be reused — per-request session state
+    is pruned at retire so long-lived streams stay O(in-flight)."""
+    eng = make_engine(True)
+    s = eng.begin()
+    req = SortRequest("sort", np.arange(8, dtype=np.uint32))
+    assert s.feed([req]) == []                 # bucketed, still in flight
+    dup = SortRequest("kmin", np.arange(8, dtype=np.uint32), k=2,
+                      request_id=req.request_id)
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        s.feed([dup])
+    assert len(s.drain()) == 1                 # original retires
+    assert s._t_fed == {} and s._outstanding == set()
+    reuse = SortRequest("sort", np.arange(8, dtype=np.uint32),
+                        request_id=req.request_id)
+    got = s.feed([reuse], flush=True)          # retired ids are reusable
+    assert len(got) == 1
+
+
+def test_session_strict_false_isolates_tile_failures():
+    eng = make_engine(True, backends=("numpy",))
+    s = eng.begin(strict=False)
+    good = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    eng.policy.by_name["numpy"].run = None            # poison execution
+    assert s.feed([good], flush=True) == []
+    failures = s.take_failures()
+    assert len(failures) == 1
+    req, exc, co = failures[0]
+    assert req.request_id == good.request_id
+    assert isinstance(exc, TypeError) and co == 1
+    # the pool is clean and the session keeps serving once the backend heals
+    assert all(b.free_rows == b.bank_rows for b in eng.pool.banks)
+    del eng.policy.by_name["numpy"].run               # restore class method
+    again = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    got = s.feed([again], flush=True)
+    assert len(got) == 1 and check_against_oracle(again, got[0])
+
+
+def test_session_strict_failure_leaves_session_coherent():
+    """A strict session's execute failure raises out of feed, but the
+    session stays usable: the failed requests leave the in-flight set,
+    surface in take_failures(), can be re-fed, and drain() still works."""
+    eng = make_engine(True, backends=("numpy",))
+    s = eng.begin()                              # strict=True default
+    req = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    eng.policy.by_name["numpy"].run = None       # poison execution
+    with pytest.raises(TypeError):
+        s.feed([req], flush=True)
+    assert [f[0].request_id for f in s.take_failures()] == [req.request_id]
+    assert s._outstanding == set() and s._t_fed == {}
+    assert all(b.free_rows == b.bank_rows for b in eng.pool.banks)
+    del eng.policy.by_name["numpy"].run          # heal, then re-feed
+    got = s.feed([req], flush=True)
+    assert len(got) == 1 and check_against_oracle(req, got[0])
+    assert s.drain() == []
+
+
+def test_session_result_cache_commits_incrementally():
+    """Streaming hits are served from the memo without touching the
+    scheduler, exactly like the batch path."""
+    eng = make_engine(True, cache_size=64)
+    s = eng.begin()
+    payload = np.arange(32, dtype=np.uint32)[::-1].copy()
+    first = s.feed([SortRequest("sort", payload.copy())], flush=True)
+    hit = s.feed([SortRequest("sort", payload.copy())])
+    assert len(first) == len(hit) == 1
+    assert hit[0].meta.get("cache_hit") is True
+    assert np.array_equal(first[0].values, hit[0].values)
+    telem = eng.telemetry()
+    assert telem["cache"]["hits"] == 1 and telem["cache"]["misses"] == 1
+    assert telem["scheduler"]["tiles"] == 1
+
+
+def test_legacy_flag_keeps_wave_scheduler_and_blocks_streaming():
+    eng = make_engine(False)
+    assert isinstance(eng.scheduler, Scheduler)
+    assert not isinstance(eng.scheduler, ContinuousScheduler)
+    resp = eng.submit([SortRequest("sort", np.arange(16, dtype=np.uint32))])
+    assert len(resp) == 1
+    with pytest.raises(ValueError, match="continuous"):
+        eng.begin()
+    with pytest.raises(ValueError, match="continuous"):
+        AsyncSortServe(eng)
+
+
+def test_mesh_bank_pool_participates_in_continuous_admission():
+    """MeshBankPool + ContinuousScheduler: mesh-backed banks are granted at
+    drain events and telemetry stays oracle-exact (§V.C invariance)."""
+    pytest.importorskip("jax")
+    eng = make_engine(True, backends=("colskip_mesh", "radix_topk", "numpy"),
+                      mesh=True, banks=4, bank_width=64, sim_width_cap=256)
+    from repro.dist.bankmesh import MeshBankPool
+    assert isinstance(eng.pool, MeshBankPool)
+    s = eng.begin()
+    reqs = make_workload(10, min_len=8, max_len=96, seed=5,
+                         ops=("sort", "kmin"))
+    got = s.feed(reqs, flush=True) + s.drain()
+    by_id = {r.request_id: r for r in got}
+    for req in reqs:
+        assert check_against_oracle(req, by_id[req.request_id])
+    assert eng.telemetry()["scheduler"]["continuous"]["admissions"] > 0
+
+
+def test_session_isolate_feed_leaves_open_buckets_alone():
+    """isolate=True gives each request a private tile and never force-
+    closes other callers' partially filled buckets."""
+    eng = make_engine(True)
+    s = eng.begin()
+    waiting = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    assert s.feed([waiting]) == []            # open bucket, 1 of 4 rows
+    solo = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    got = s.feed([solo], isolate=True)
+    assert [r.request_id for r in got] == [solo.request_id]
+    assert got[0].bucket_shape == (4, 16)     # private padded tile
+    assert s._batcher.pending() == 1          # waiting's bucket still open
+    rest = s.drain()
+    assert [r.request_id for r in rest] == [waiting.request_id]
+
+
+def test_failed_submit_does_not_orphan_session_batcher_stats():
+    """_restore_state rolls stats back in place: a streaming session that
+    captured the engine's BatcherStats by reference keeps aggregating into
+    engine telemetry after another caller's submit failed and rolled back."""
+    eng = make_engine(True)
+    session = eng.begin()
+    bad = SortRequest("sort", np.arange(16, dtype=np.uint32),
+                      backend="numpy")
+    eng.policy.by_name["numpy"].run = None
+    with pytest.raises(TypeError):
+        eng.submit([bad])
+    del eng.policy.by_name["numpy"].run
+    assert session._batcher.stats is eng.batcher.stats
+    got = session.feed(
+        [SortRequest("sort", np.arange(16, dtype=np.uint32))], flush=True)
+    assert len(got) == 1
+    assert eng.telemetry()["batcher"]["tiles"] == 1
+
+
+# -------------------------------------------------------- async front door
+def test_async_streams_without_flush_barrier():
+    """The async front door feeds the continuous scheduler directly: every
+    request is its own arrival (no synthesized micro-batches), and requests
+    of different shapes complete independently."""
+    eng = make_engine(True)
+    server = AsyncSortServe(eng, max_batch=8, max_wait_ms=20.0)
+    reqs = make_workload(10, min_len=8, max_len=64, seed=17)
+    futures = [server.submit(q) for q in reqs]
+    got = [f.result(timeout=120) for f in futures]
+    server.close()
+    for q, resp in zip(reqs, got):
+        assert check_against_oracle(q, resp)
+    cont = eng.telemetry()["scheduler"]["continuous"]
+    assert cont["arrivals"] == cont["admissions"] > 0
+    # per-request latency is individual, not one batch wall for everyone
+    assert len({r.latency_s for r in got}) > 1
+
+
+def test_async_fake_clock_age_closure_without_sleeps():
+    """clock= threads through the front door: a lone request is released by
+    ticking the fake clock past max_wait, never by a real sleep."""
+    clock = FakeClock()
+    eng = make_engine(True, clock=clock)
+    server = AsyncSortServe(eng, max_batch=4, max_wait_ms=50.0, clock=clock)
+    req = SortRequest("sort", np.arange(24, dtype=np.uint32))
+    fut = server.submit(req)
+    clock.tick(0.1)                      # > max_wait: bucket ages out
+    resp = fut.result(timeout=60)
+    assert check_against_oracle(req, resp)
+    server.close()
+
+
+def test_async_duplicate_in_flight_id_fails_newcomer_not_original():
+    """A second in-flight request with the same id fails its own future;
+    the original's future still resolves (it is never orphaned)."""
+    eng = make_engine(True)
+    server = AsyncSortServe(eng, max_batch=4, max_wait_ms=20.0)
+    first = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    dup = SortRequest("sort", np.arange(16, dtype=np.uint32)[::-1].copy(),
+                      request_id=first.request_id)
+    f1, f2 = server.submit(first), server.submit(dup)
+    with pytest.raises(ValueError, match="already in flight|duplicate"):
+        f2.result(timeout=60)
+    assert check_against_oracle(first, f1.result(timeout=60))
+    server.close()
+
+
+def test_async_retry_isolates_offender_from_co_bucketed_neighbour():
+    """Two same-shape requests share a tile; the tile fails; the retry path
+    re-feeds each alone so only the true offender's future errors."""
+    eng = make_engine(True, backends=("numpy",), tile_rows=2)
+    server = AsyncSortServe(eng, max_batch=4, max_wait_ms=30.0)
+    orig_run = type(eng.policy.by_name["numpy"]).run
+
+    def poisoned(self, tile):
+        if any(req.request_id == bad.request_id for req, _ in tile.entries):
+            raise RuntimeError("injected tile failure")
+        return orig_run(self, tile)
+
+    good = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    bad = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    eng.policy.by_name["numpy"].run = poisoned.__get__(
+        eng.policy.by_name["numpy"])
+    try:
+        f_good, f_bad = server.submit(good), server.submit(bad)
+        server.close()
+        assert check_against_oracle(good, f_good.result(timeout=60))
+        with pytest.raises(RuntimeError, match="injected"):
+            f_bad.result(timeout=60)
+    finally:
+        del eng.policy.by_name["numpy"].run
