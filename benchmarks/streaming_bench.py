@@ -24,11 +24,19 @@ of narrow tiles per burst) where the barrier strands half the pool in
 every batch tail.  Latencies are reported at the modeled 500 MHz clock;
 tiles/s is tiles over makespan at that clock.
 
+An **overload** trace (PR 5) measures the backpressure watermarks: offered
+load well past pool capacity, served three ways on the same event
+machinery — no admission policy (the queue grows without bound), defer
+watermarks, and shed watermarks.  Reported per row: p50/p99 of *served*
+tiles, peak admission-queue depth, and the shed/deferred counts — the
+BENCH_5 acceptance is bounded queue depth and a better served-p99 with
+backpressure on vs off.
+
 Two wall-clock rows ride along: a real engine serving a streaming session
 locally, and (when jax devices exist) through the mesh bank pool — the
 ``--mesh`` analogue inside one process.
 
-    PYTHONPATH=src python -m benchmarks.run --only streaming --out BENCH_4.json
+    PYTHONPATH=src python -m benchmarks.run --only streaming --out BENCH_5.json
     PYTHONPATH=src python -m benchmarks.streaming_bench [--mesh]
 """
 
@@ -41,7 +49,11 @@ import numpy as np
 from repro.core.costmodel import BASE_CLOCK_MHZ, estimate_colskip_cycles
 from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
 from repro.sortserve.batcher import Tile
-from repro.sortserve.scheduler import BankPool, ContinuousScheduler
+from repro.sortserve.scheduler import (
+    BankPool,
+    ContinuousScheduler,
+    WatermarkPolicy,
+)
 
 ROWS = 8
 CYC_TO_S = 1.0 / (BASE_CLOCK_MHZ * 1e6)
@@ -180,6 +192,79 @@ def _bench_discipline(report, name: str, trace, window: float):
     return ok
 
 
+def serve_overload(trace, pool: BankPool, policy):
+    """Feed an over-capacity trace through a watermarked scheduler.
+
+    Returns (latencies of served tiles, shed count, telemetry)."""
+    sched = ContinuousScheduler(pool, policy=policy)
+    ex = ModelExec()
+    lat, shed = [], [0]
+    by_id = {}
+
+    def sink(tile, result, exc):
+        if exc is not None:
+            shed[0] += 1
+        else:
+            lat.append(sched.vt - by_id[id(tile)])
+
+    tiles = [(_tile(w), t) for t, w in trace]
+    for tile, t in tiles:
+        by_id[id(tile)] = t
+    for tile, t in tiles:
+        sched.feed([tile], ex, sink=sink, at=t, strict=False)
+    sched.pump()
+    return np.asarray(lat), shed[0], sched.telemetry()
+
+
+def _bench_overload(report):
+    """Backpressure on vs off under sustained over-capacity traffic.
+
+    8 banks x 256-wide tiles: one tile per bank, service ~2008 cycles, so
+    capacity is one admission per ~251 cycles; the trace offers one per 150
+    (≈1.7x overload, 600 arrivals).  Without a policy the admission queue
+    grows without bound and served latency climbs linearly; watermarks
+    bound the queue and keep the served tail flat (shed) or bounded by the
+    deferral deadline (defer)."""
+    modes = {
+        "off": None,
+        "defer": WatermarkPolicy(high_watermark=32, retry_after_vt=4000.0,
+                                 deadline_vt=200_000.0),
+        "shed": WatermarkPolicy(high_watermark=32, shed=True,
+                                retry_after_vt=4000.0),
+    }
+    trace = [(i * 150.0, 256) for i in range(600)]
+    rows = {}
+    for mode, policy in modes.items():
+        pool = BankPool(banks=8, bank_width=256, bank_rows=ROWS)
+        lat, shed, telem = serve_overload(trace, pool, policy)
+        cont = telem["continuous"]
+        q = _quantiles_us(lat) if len(lat) else {50: 0.0, 95: 0.0, 99: 0.0}
+        rows[mode] = (q, shed, cont)
+        report(
+            name=f"streaming/overload_{mode}",
+            us_per_call=q[99],
+            derived=(f"p50={q[50]:.0f}us p99={q[99]:.0f}us "
+                     f"served={len(lat)} shed={shed} "
+                     f"shed_rate={shed / len(trace):.2f} "
+                     f"deferred={cont['deferred']} "
+                     f"queued_peak={cont['queued_peak']} "
+                     f"crossings={cont['high_watermark_crossings']}"),
+        )
+    (q_off, _, c_off), (q_shed, n_shed, c_shed) = rows["off"], rows["shed"]
+    ok = (q_shed[99] < q_off[99]
+          and c_shed["queued_peak"] < c_off["queued_peak"]
+          and n_shed > 0)
+    report(
+        name="streaming/overload_backpressure",
+        us_per_call=q_shed[99],
+        derived=(f"p99_ratio={q_off[99] / max(q_shed[99], 1e-9):.1f}x "
+                 f"queue_peak {c_off['queued_peak']}->"
+                 f"{c_shed['queued_peak']} "
+                 + ("PASS" if ok else "MISS")),
+    )
+    return ok
+
+
 def _bench_real_session(report, mesh: bool):
     """Wall-clock sanity row: a real engine serving a streaming session."""
     label = "mesh" if mesh else "local"
@@ -224,6 +309,9 @@ def run(report, mesh: bool = False):
     # giant's service time — the acceptance workload (BENCH_4)
     trace_b = bursty_trace(40, gap=40_000.0)
     _bench_discipline(report, "bursty", trace_b, window=8000.0)
+    # Sustained over-capacity traffic: backpressure watermarks vs unbounded
+    # queueing (the BENCH_5 acceptance row)
+    _bench_overload(report)
     _bench_real_session(report, mesh=False)
     if mesh:
         _bench_real_session(report, mesh=True)

@@ -1,0 +1,98 @@
+"""Docs link/anchor/path checker — fails CI on stale references.
+
+    python scripts/check_docs.py
+
+Checks, over ``docs/*.md`` + ``README.md`` + ``ROADMAP.md``:
+
+  * every relative markdown link ``[text](target)`` resolves to a file in
+    the tree (http(s) links are skipped — no network in CI);
+  * every ``#anchor`` on a markdown link matches a heading in the target
+    file (GitHub slugification);
+  * every path-looking code reference (``src/...``, ``tests/...``,
+    ``benchmarks/...``, ``docs/...``, ``examples/...``, ``scripts/...``,
+    ``BENCH_*.json``, ``.github/...``) names a file or directory that
+    actually exists, so docs cannot drift from the tree silently.
+
+Stdlib only; exit code 1 with a per-file report when anything is stale.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path-like references in prose/code spans: a known top-level root followed
+# by at least one path segment, or a committed BENCH_*.json
+PATH_RE = re.compile(
+    r"\b((?:src|tests|benchmarks|docs|examples|scripts|\.github)/"
+    r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]|BENCH_[A-Za-z0-9_]+\.json)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = sorted((ROOT / "docs").glob("*.md"))
+    for name in ("README.md", "ROADMAP.md"):
+        p = ROOT / name
+        if p.exists():
+            files.append(p)
+    return files
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slugification (the subset our docs use)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path) -> set[str]:
+    return {github_slug(h) for h in HEADING_RE.findall(md.read_text())}
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    text = md.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"broken link: ({target}) -> {dest}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"broken anchor: ({target}) — no heading "
+                              f"'{anchor}' in {dest.name}")
+    for ref in PATH_RE.findall(text):
+        # strip sentence punctuation that the regex may have swallowed
+        ref = ref.rstrip(".")
+        if ref.endswith("_ci.json"):
+            continue    # CI-run artifacts, produced by the workflow, not
+            # committed — referring to them by name is legitimate
+        if not (ROOT / ref).exists():
+            errors.append(f"stale code reference: {ref}")
+    return errors
+
+
+def main() -> int:
+    failures = 0
+    for md in doc_files():
+        errors = check_file(md)
+        for err in errors:
+            print(f"{md.relative_to(ROOT)}: {err}")
+        failures += len(errors)
+    checked = len(doc_files())
+    if failures:
+        print(f"FAIL: {failures} stale reference(s) across {checked} files")
+        return 1
+    print(f"OK: {checked} files, no stale links/anchors/paths")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Regenerate the recorded golden telemetry that pins the flushed-batch
+serving semantics (tests/golden/continuous_telemetry.json).
+
+    PYTHONPATH=src python scripts/record_golden.py
+
+The golden file was first recorded while the legacy wave scheduler still
+existed and the continuous path was asserted bit-identical to it, so it
+carries the wave semantics forward.  Only regenerate after an *intentional*
+behaviour change, and say why in the commit message.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tests"))
+
+
+def main() -> int:
+    from test_continuous import GOLDEN, golden_payload
+
+    payload = golden_payload()
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"recorded {len(payload['responses'])} responses -> {GOLDEN}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

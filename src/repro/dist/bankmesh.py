@@ -19,14 +19,29 @@ for the collective realization too, :class:`MeshBankPool` telemetry is
 backend may freely fall back to one bank when a tile's width does not divide
 the mesh.
 
-Since PR 4 the serving engine drives its pool through the event-driven
-:class:`~repro.sortserve.scheduler.ContinuousScheduler`; `MeshBankPool`
-inherits the whole placement/readiness/drain surface from
-:class:`~repro.sortserve.scheduler.BankPool`, so mesh-backed banks take part
-in continuous admission unchanged — tiles are granted device shard groups
-the moment earlier mesh tiles drain, with no engine-batch flush barrier
-between them (exercised by the ``--mesh`` CLI smoke and
+The serving engine drives its pool through the event-driven
+:class:`~repro.sortserve.scheduler.ContinuousScheduler` (the only scheduler
+since PR 5); `MeshBankPool` inherits the whole placement/readiness/drain
+surface from :class:`~repro.sortserve.scheduler.BankPool`, so mesh-backed
+banks take part in continuous admission — and in PR 5's watermark
+backpressure — unchanged: tiles are granted device shard groups the moment
+earlier mesh tiles drain, with no engine-batch flush barrier between them,
+and the admission policy sees the mesh pool's queue depth and occupancy
+through the identical signals (exercised by the ``--mesh`` CLI smoke and
 tests/test_continuous.py).
+
+Event-model invariants this module must preserve (pinned by
+tests/test_bankmesh.py and tests/test_continuous.py):
+
+1. **Virtual-time units** — mesh tiles report the same §V modeled-cycle
+   telemetry as the local kernel, so their event-clock service durations
+   (and therefore every admission decision) are identical to a local pool.
+2. **Bank-cycle conservation** — §V.C on the mesh: one tile charges its
+   cycle count to every device bank of its shard group, never more or less,
+   so pool-wide ``busy_cycles`` is independent of device placement.
+3. **Owner-scoped abort** — `MeshBankPool` adds no placement state outside
+   `LogicalBank`, so `ContinuousScheduler.abort` releases device shard
+   groups exactly like local banks.
 """
 
 from __future__ import annotations

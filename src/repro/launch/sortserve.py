@@ -92,10 +92,15 @@ def main(argv=None):
                          "lane-packed hot path (equivalence baseline)")
     ap.add_argument("--static_policy", action="store_true",
                     help="disable measured-EMA routing; static width cap only")
-    ap.add_argument("--legacy_scheduler", action="store_true",
-                    help="batch-synchronous wave scheduler instead of the "
-                         "event-driven continuous core (one release of "
-                         "grace; telemetry parity asserted in tests)")
+    ap.add_argument("--high_watermark", type=int, default=0,
+                    help="admission-queue depth watermark for overload "
+                         "backpressure (0 = accept everything); arrivals "
+                         "beyond it defer, or shed with --shed_overload")
+    ap.add_argument("--low_watermark", type=int, default=None,
+                    help="hysteresis low mark (default: high_watermark/2)")
+    ap.add_argument("--shed_overload", action="store_true",
+                    help="shed (deterministically reject) arrivals over the "
+                         "watermark instead of deferring them")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     args = ap.parse_args(argv)
 
@@ -109,6 +114,14 @@ def main(argv=None):
         # invariance keeps every telemetry assertion identical
         backends = tuple("colskip_mesh" if b == "colskip" else b
                          for b in backends)
+    if args.shed_overload and not args.high_watermark:
+        ap.error("--shed_overload needs --high_watermark N")
+    admission = None
+    if args.high_watermark:
+        from repro.sortserve import WatermarkPolicy
+        admission = WatermarkPolicy(high_watermark=args.high_watermark,
+                                    low_watermark=args.low_watermark,
+                                    shed=args.shed_overload)
     as_flag = {"auto": None, "on": True, "off": False}
     cfg = EngineConfig(
         backends=backends,
@@ -122,22 +135,35 @@ def main(argv=None):
         interpret=as_flag[args.interpret],
         packed=not args.dense,
         adaptive_policy=not args.static_policy,
-        continuous=not args.legacy_scheduler,
+        admission=admission,
     )
     engine = SortServeEngine(cfg)
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)
 
     t0 = time.time()
-    resps = engine.submit(reqs)
+    shed = []
+    if args.shed_overload:
+        # shedding rejects requests by design: serve through a strict=False
+        # session so sheds surface as accounted failures, not a raise
+        session = engine.begin(strict=False)
+        got = session.feed(reqs, flush=True) + session.drain()
+        shed = session.take_failures()
+        by_id = {r.request_id: r for r in got}
+        resps = [by_id.get(q.request_id) for q in reqs]
+    else:
+        resps = engine.submit(reqs)
     dt = time.time() - t0
 
-    mismatches = sum(not check_against_oracle(q, r) for q, r in zip(reqs, resps))
+    n_served = sum(r is not None for r in resps)
+    mismatches = sum(r is not None and not check_against_oracle(q, r)
+                     for q, r in zip(reqs, resps))
     telem = engine.telemetry()
     backends_used = sorted(telem["per_backend"])
     ops_served = sorted({q.op for q in reqs})
 
-    print(f"served {len(resps)} requests in {dt:.2f}s "
-          f"({len(resps) / dt:.1f} req/s incl compile)")
+    print(f"served {n_served} requests in {dt:.2f}s "
+          f"({n_served / dt:.1f} req/s incl compile)"
+          + (f"  [{len(shed)} shed]" if shed else ""))
     print(f"ops: {','.join(ops_served)}  backends: {','.join(backends_used)}")
     print(f"oracle mismatches: {mismatches}")
     print(f"aggregate column reads: {telem['column_reads']}  "
@@ -159,6 +185,11 @@ def main(argv=None):
               f"queue wait {cont['queue_wait_vt']:.0f} cyc  "
               f"occupancy {cont['occupancy']:.2f}  "
               f"makespan {cont['makespan_vt']:.0f} cyc")
+        if admission is not None:
+            print(f"backpressure: {cont['deferred']} deferred  "
+                  f"{cont['shed']} shed  "
+                  f"{cont['high_watermark_crossings']} watermark crossings  "
+                  f"queued peak {cont['queued_peak']}")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

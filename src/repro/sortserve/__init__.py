@@ -9,28 +9,43 @@ up, turning the repo's sorting engines into a request-level service:
   * :mod:`batcher`   — pow-2 shape bucketing with sentinel padding in the
     order-preserving sortable-uint32 domain, coalescing requests into fixed
     ``(B, N)`` tiles so jit caches stay warm,
-  * :mod:`scheduler` — bank-pool schedulers modeled on the §IV manager:
-    per-bank occupancy, OR-combined readiness, drain policy for oversized
-    tiles that shard across banks; the event-driven
-    :class:`~repro.sortserve.scheduler.ContinuousScheduler` (default) admits
-    tiles the moment banks drain, the legacy wave
-    :class:`~repro.sortserve.scheduler.Scheduler` stays behind
-    ``EngineConfig(continuous=False)``,
+  * :mod:`scheduler` — the bank-pool scheduler modeled on the §IV manager:
+    per-bank occupancy, OR-combined readiness, oversized tiles sharded
+    across banks; the event-driven
+    :class:`~repro.sortserve.scheduler.ContinuousScheduler` admits tiles
+    the moment banks drain, with a pluggable
+    :class:`~repro.sortserve.scheduler.AdmissionPolicy` (watermark
+    backpressure: accept / defer / shed) gating arrivals under overload,
   * :mod:`backends`  — pluggable execution backends (colskip, radix_topk,
-    jaxsort, numpy oracle) behind a cost-model-driven selection policy,
-  * :mod:`engine`    — streaming sessions (``begin()/feed()/drain()``), the
-    batch ``submit`` wrapper, the barrier-free async front door, and JSON
-    telemetry (latency, column reads / cycles, bucket hit rates, event-clock
-    admission stats).
+    jaxsort, numpy oracle) behind a cost-model-driven selection policy with
+    per-traffic-class measured priors,
+  * :mod:`engine`    — streaming sessions
+    (``begin(traffic_class=...)/feed()/drain()``), the batch ``submit``
+    wrapper, the bounded async front door (:class:`RetryAfter`
+    backpressure), and JSON telemetry (latency, column reads / cycles,
+    bucket hit rates, event-clock admission + overload stats).
 """
 
 from .backends import BACKENDS, CostPolicy, resolve_backends, solve_numpy
 from .batcher import Batcher, Tile, pow2_bucket
-from .engine import AsyncSortServe, EngineConfig, SortServeEngine, SortSession
+from .engine import (
+    AsyncSortServe,
+    EngineConfig,
+    RetryAfter,
+    SortServeEngine,
+    SortSession,
+)
 from .request import OP_KINDS, SortRequest, SortResponse, encode_payload
-from .scheduler import BankPool, ContinuousScheduler, Scheduler
+from .scheduler import (
+    AdmissionPolicy,
+    BankPool,
+    ContinuousScheduler,
+    ShedError,
+    WatermarkPolicy,
+)
 
 __all__ = [
+    "AdmissionPolicy",
     "AsyncSortServe",
     "BACKENDS",
     "BankPool",
@@ -39,12 +54,14 @@ __all__ = [
     "CostPolicy",
     "EngineConfig",
     "OP_KINDS",
-    "Scheduler",
+    "RetryAfter",
+    "ShedError",
     "SortRequest",
     "SortResponse",
     "SortServeEngine",
     "SortSession",
     "Tile",
+    "WatermarkPolicy",
     "encode_payload",
     "pow2_bucket",
     "resolve_backends",

@@ -204,6 +204,18 @@ class Backend:
     def run(self, tile: Tile) -> TileResult:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
+        """Pre-compile this backend's executor for a tile signature.
+
+        Session prewarming (``SortServeEngine.begin(traffic_class=...)``)
+        calls this for every signature in the class's recorded menu, so the
+        first real tile of a new session lands on a warm executable.
+        Returns True only when this call actually compiled (a cache miss) —
+        an already-warm signature, or a backend with no AOT executor (the
+        base class, the numpy oracle), returns False, so the engine's
+        ``prewarmed`` counter measures real compiles."""
+        return False
+
     def __repr__(self):
         return f"<{type(self).__name__} {self.name} ops={sorted(self.ops)}>"
 
@@ -281,6 +293,13 @@ class ColskipBackend(Backend):
                                            "packed": self.packed,
                                            "exec_warm": warm})
 
+    def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
+        stop = k if op == "kmin" else None
+        _, hit = _compiled_colskip(b, n, self.w, self.state_k, stop,
+                                   self.use_pallas, self.interpret,
+                                   self.packed)
+        return not hit
+
 
 @register_backend
 class ShardedColskipBackend(Backend):
@@ -341,6 +360,26 @@ class ShardedColskipBackend(Backend):
                                 "stop_after": stop, "mesh_banks": banks_used,
                                 "packed": self.packed, "exec_warm": warm})
 
+    def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.dist.bankmesh import sharded_tile_fn
+        n_dev = self.mesh.shape[self.axis_name]
+        stop = k if op == "kmin" else None
+        if n % n_dev == 0 and n_dev > 1:
+            stop_eff = min(stop, n) if stop is not None else n
+            key = ("colskip_mesh", b, n, self.w, self.state_k, stop_eff,
+                   self.packed, self.axis_name, self.mesh)
+            _, hit = EXECUTOR_CACHE.get(key, lambda: _aot_compile(
+                sharded_tile_fn(self.mesh, self.axis_name, self.w,
+                                self.state_k, stop_eff, self.packed),
+                jax.ShapeDtypeStruct((b, n), jnp.uint32)))
+        else:
+            _, hit = _compiled_colskip(b, n, self.w, self.state_k, stop,
+                                       False, None, self.packed)
+        return not hit
+
 
 @register_backend
 class RadixTopkBackend(Backend):
@@ -374,6 +413,19 @@ class RadixTopkBackend(Backend):
                           meta={"planes_max": int(reads.max(initial=0)),
                                 "exec_warm": warm})
 
+    def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
+        import jax
+        import jax.numpy as jnp
+
+        if k is None:
+            return False                    # selection ops always carry k
+        kmin = op == "kmin"
+        key = ("radix_topk", b, n, k, kmin)
+        _, hit = EXECUTOR_CACHE.get(key, lambda: _aot_compile(
+            lambda x: _radix_select(x, k, kmin),
+            jax.ShapeDtypeStruct((b, n), jnp.uint32)))
+        return not hit
+
 
 @register_backend
 class JaxSortBackend(Backend):
@@ -399,6 +451,16 @@ class JaxSortBackend(Backend):
         est = estimate_colskip_cycles(n) * b
         return TileResult(vals, order, None, None, self.name,
                           estimated_cycles=est, meta={"exec_warm": warm})
+
+    def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
+        import jax
+        import jax.numpy as jnp
+
+        key = ("jaxsort", b, n)
+        EXECUTOR_CACHE.get(key, lambda: _aot_compile(
+            lambda x: jnp.argsort(x, axis=-1, stable=True),
+            jax.ShapeDtypeStruct((b, n), jnp.uint32)))
+        return True
 
 
 def _radix_select(u, k: int, kmin: bool):
@@ -439,6 +501,11 @@ class CostPolicy:
          ``explore_after`` times while the alternative never ran, the policy
          routes one tile to the alternative so the comparison becomes
          measured (bounded exploration; disable with ``adaptive=False``).
+
+    Sessions opened with a **traffic class** keep private per-class EMA
+    priors on top of the engine-global one (a class's widths/ops can race
+    differently from the aggregate stream); the global prior is always fed
+    too and serves as the fallback until the class has its own samples.
     """
 
     def __init__(self, backends, sim_width_cap: int = 2048, w: int = 32, *,
@@ -451,40 +518,58 @@ class CostPolicy:
         self.adaptive = adaptive
         self.ema_alpha = float(ema_alpha)
         self.explore_after = int(explore_after)
-        self._ema: dict[tuple, float] = {}  # (backend, op, N, k) -> s/row EMA
-        self._obs: dict[tuple, int] = {}    # (backend, op, N, k) -> samples
+        # (backend, op, N, k, traffic_class) -> s/row EMA / sample count;
+        # traffic_class None is the engine-global prior every class falls
+        # back to until its own stream has been measured
+        self._ema: dict[tuple, float] = {}
+        self._obs: dict[tuple, int] = {}
 
     # ------------------------------------------------------------ measured
     def observe(self, backend_name: str, op: str, n: int, rows: int,
-                wall_s: float, k: int | None = None) -> None:
+                wall_s: float, k: int | None = None,
+                traffic_class: str | None = None) -> None:
         """Feed one measured tile execution into the per-signature EMA.
 
         ``k`` is part of the signature: a kmin tile's simulator cost scales
-        with its drain count, so different k must never share an EMA."""
-        key = (backend_name, op, int(n), k)
+        with its drain count, so different k must never share an EMA.
+        ``traffic_class`` additionally updates that class's private prior
+        (sessions opened with ``begin(traffic_class=...)``) — the global
+        (class-None) EMA is always updated too, so unclassified traffic
+        keeps learning from every execution."""
         per_row = wall_s / max(1, rows)
-        prev = self._ema.get(key)
-        self._ema[key] = per_row if prev is None else (
-            (1.0 - self.ema_alpha) * prev + self.ema_alpha * per_row)
-        self._obs[key] = self._obs.get(key, 0) + 1
+        for cls in ({None, traffic_class} if traffic_class is not None
+                    else (None,)):
+            key = (backend_name, op, int(n), k, cls)
+            prev = self._ema.get(key)
+            self._ema[key] = per_row if prev is None else (
+                (1.0 - self.ema_alpha) * prev + self.ema_alpha * per_row)
+            self._obs[key] = self._obs.get(key, 0) + 1
 
     def measured_s_per_row(self, backend_name: str, op: str, n: int,
-                           k: int | None = None) -> float | None:
-        """Current EMA for a signature, or None if never executed."""
-        return self._ema.get((backend_name, op, int(n), k))
+                           k: int | None = None,
+                           traffic_class: str | None = None) -> float | None:
+        """Current EMA for a signature (class-specific first, then the
+        global prior), or None if never executed."""
+        if traffic_class is not None:
+            v = self._ema.get((backend_name, op, int(n), k, traffic_class))
+            if v is not None:
+                return v
+        return self._ema.get((backend_name, op, int(n), k, None))
 
     def _pick_measured(self, a: Backend, b: Backend, op: str, n: int,
-                       k: int | None, allow_explore: bool = True):
+                       k: int | None, allow_explore: bool = True,
+                       traffic_class: str | None = None):
         """Measured EMA comparison / bounded exploration between a (the
         prior's pick) and b (the alternative); None -> keep the prior."""
         if not self.adaptive or b is None:
             return None
-        ea = self.measured_s_per_row(a.name, op, n, k)
-        eb = self.measured_s_per_row(b.name, op, n, k)
+        ea = self.measured_s_per_row(a.name, op, n, k, traffic_class)
+        eb = self.measured_s_per_row(b.name, op, n, k, traffic_class)
         if ea is not None and eb is not None:
             return a if ea <= eb else b
         if allow_explore and eb is None and \
-                self._obs.get((a.name, op, int(n), k), 0) >= self.explore_after:
+                self._obs.get((a.name, op, int(n), k, None),
+                              0) >= self.explore_after:
             return b                        # one probe makes it a measured race
         return None
 
@@ -496,7 +581,8 @@ class CostPolicy:
         return costmodel.colskip_cost(cpn, n=n, w=self.w, k=state_k,
                                       banks=banks).throughput_num_per_s
 
-    def choose(self, tile: Tile) -> Backend:
+    def choose(self, tile: Tile,
+               traffic_class: str | None = None) -> Backend:
         if tile.hint is not None:       # hints are uniform per tile (bucket key)
             if tile.hint not in self.by_name:
                 raise KeyError(f"hinted backend {tile.hint!r} not enabled")
@@ -532,7 +618,7 @@ class CostPolicy:
             prior, alt = (sim, fast) if n <= self.sim_width_cap else (fast, sim)
             allow = alt is not sim or n <= 2 * self.sim_width_cap
             return self._pick_measured(prior, alt, tile.op, n, tile.k,
-                                       allow) or prior
+                                       allow, traffic_class) or prior
         if sim is not None and n <= self.sim_width_cap:
             return sim                    # cycle-exact simulation, affordable
         # past the cap: any non-simulating backend before the O(N*w)-per-

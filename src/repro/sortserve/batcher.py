@@ -124,6 +124,15 @@ class Batcher:
         # policy-routed requests
         return (req.op, n_pad, k_pad, req.backend)
 
+    def signature_of(self, req: SortRequest) -> tuple:
+        """The jit/executor signature of the tile this request would join:
+        ``(op, tile_rows, pow2(N), pow2(k), hint)`` — identical to
+        :attr:`Tile.signature` (tiles are always ``tile_rows`` tall).  The
+        engine records these per traffic class so ``begin(traffic_class=…)``
+        can prewarm a session's executor menu before any tile runs."""
+        op, n_pad, k_pad, hint = self.bucket_key(req)
+        return (op, self.tile_rows, n_pad, k_pad, hint)
+
     def add(self, req: SortRequest, now: float | None = None) -> None:
         """Bucket a request; ``now`` stamps it for age-based closing."""
         self._groups[self.bucket_key(req)].append(

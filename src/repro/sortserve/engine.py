@@ -1,25 +1,41 @@
 """The serving loop: streaming sessions, sync submit, async front door.
 
-The continuous data path (default since PR 4) is session-shaped:
+The data path is session-shaped (the continuous core is the ONLY core
+since PR 5 — the legacy wave scheduler is gone):
 
-    session = engine.begin()
+    session = engine.begin(traffic_class=...)
     session.feed(requests)   --encode--> per-session Batcher (closes buckets
                              on size or age) --tiles--> ContinuousScheduler
-                             (event-clock admission as banks drain)
+                             (event-clock admission as banks drain, gated by
+                             the AdmissionPolicy under overload)
                              --CostPolicy--> backend.run --> scatter
     session.poll()/drain()   --> responses as their tiles retire
 
-``SortServeEngine.submit`` is retained unchanged for batch callers as a
-thin **feed-then-drain wrapper** over one ephemeral session, with the same
-ingress-validation and telemetry-rollback contract as before; setting
-``EngineConfig.continuous=False`` restores the legacy wave scheduler
-(one release of grace, see ROADMAP).  :class:`AsyncSortServe` feeds a
-long-lived streaming session directly from its collector thread —
-requests no longer wait on a global flush barrier, only on their own
-bucket's size/age closure.
+``SortServeEngine.submit`` serves batch callers as a thin
+**feed-then-drain wrapper** over one ephemeral session, with ingress
+validation and all-or-nothing telemetry rollback.  :class:`AsyncSortServe`
+feeds a long-lived streaming session directly from its collector thread —
+requests wait only on their own bucket's size/age closure, and the front
+door is *bounded*: ``max_inflight`` caps accepted-but-unresolved futures
+(excess submissions fail fast with :class:`RetryAfter`), and tiles shed by
+the engine's :class:`~repro.sortserve.scheduler.AdmissionPolicy` surface
+as :class:`RetryAfter` on the caller's future instead of growing the event
+heap.
 
-Everything is deterministic given the injectable ``clock``; the bank-pool
-event clock itself runs in virtual hardware cycles and never sleeps.
+Sessions opened with ``begin(traffic_class=...)`` get two extras: the
+:class:`~repro.sortserve.backends.CostPolicy` keeps a private measured-EMA
+prior per class, and the executor cache is **prewarmed** at ``begin()``
+with the class's recorded tile-signature menu, so a new session's first
+tiles land on warm AOT executables.
+
+Event-model invariants the engine layers on top of the scheduler's (see
+:mod:`repro.sortserve.scheduler`): responses are delivered **exactly
+once** per fed request; per-request latency spans feed -> retire on the
+engine's injectable ``clock``; a failed or shed request leaves the session
+entirely (re-feedable, surfaced via ``take_failures``), and a failed
+``submit`` rolls every telemetry counter back.  Everything is
+deterministic given the injectable ``clock``; the bank-pool event clock
+itself runs in virtual hardware cycles and never sleeps.
 
 Telemetry is aggregated across sessions/submits and exported by
 :meth:`SortServeEngine.telemetry` / :meth:`dump_telemetry`:
@@ -60,9 +76,24 @@ from .backends import (
 )
 from .batcher import Batcher, Tile
 from .request import SortRequest, SortResponse, decode_values
-from .scheduler import BankPool, ContinuousScheduler, Scheduler
+from .scheduler import BankPool, ContinuousScheduler, ShedError
 
-__all__ = ["AsyncSortServe", "EngineConfig", "SortServeEngine", "SortSession"]
+__all__ = ["AsyncSortServe", "EngineConfig", "RetryAfter", "SortServeEngine",
+           "SortSession"]
+
+
+class RetryAfter(RuntimeError):
+    """Caller-visible backpressure from the async front door.
+
+    Raised on a future when the service is over capacity — the inflight
+    bound was hit, or the engine's admission policy shed the request.  The
+    caller should back off ``retry_after_s`` seconds and resubmit; the
+    request was **not** executed (deterministic rejection, never a silent
+    drop)."""
+
+    def __init__(self, message: str, retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
 
 
 @dataclass
@@ -83,8 +114,8 @@ class EngineConfig:
     interpret: bool | None = None   # Pallas interpret mode (None = auto)
     packed: bool = True             # lane-packed masks in the §III machine
     adaptive_policy: bool = True    # measured-EMA routing over the cap prior
-    continuous: bool = True         # event-driven scheduler + sessions;
-                                    # False restores the legacy wave loop
+    admission: object | None = None  # AdmissionPolicy (e.g. WatermarkPolicy)
+                                     # gating arrivals; None accepts all
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -139,18 +170,20 @@ class SortServeEngine:
                                  w=self.config.w,
                                  adaptive=self.config.adaptive_policy)
         self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
-        # one persistent scheduler for the engine's lifetime: the event-clock
-        # continuous scheduler by default, the legacy wave loop behind the
-        # config flag (both share the BankPool + telemetry key set)
-        self.scheduler = (ContinuousScheduler(self.pool)
-                          if self.config.continuous else Scheduler(self.pool))
+        # one persistent event-clock scheduler for the engine's lifetime;
+        # the admission policy (if any) gates arrivals under overload
+        self.scheduler = ContinuousScheduler(self.pool,
+                                             policy=self.config.admission)
         # serializes sessions/submits over the shared scheduler + telemetry
         # (the async front door feeds from its collector thread)
         self._lock = threading.RLock()
-        # per-engine executor hit/miss counts (the cache itself is
+        # per-engine executor hit/miss/prewarm counts (the cache itself is
         # process-global; per-call warm flags keep attribution correct even
         # with several engines or threads sharing it)
-        self._exec_stats = {"hits": 0, "misses": 0}
+        self._exec_stats = {"hits": 0, "misses": 0, "prewarmed": 0}
+        # traffic-class -> set of tile signatures seen from that class's
+        # sessions; begin(traffic_class=...) prewarms executors from it
+        self._class_menus: dict[str, set] = {}
         self._cache: OrderedDict = OrderedDict()
         # bounded window for percentiles + running totals for all-time mean,
         # so a long-lived service does not accumulate one float per request
@@ -211,28 +244,26 @@ class SortServeEngine:
                     f"request {req.request_id}: no enabled backend serves "
                     f"op {req.op!r}; have {sorted(self.policy.by_name)}")
 
-    def _snapshot_state(self, inline_commits: bool = True) -> dict:
+    def _snapshot_state(self) -> dict:
         """Everything a failed batch must roll back (the executor cache is
         exempt by design: compiled executables stay warm for retries).
-
-        ``inline_commits`` also snapshots the result cache and latency
-        window — needed on the continuous path, where sessions commit both
-        as tiles retire; the wave path commits them only after success, so
-        it skips that copy."""
-        snap = dict(
+        Sessions commit the result cache and latency window inline as tiles
+        retire, so both are part of the snapshot."""
+        return dict(
             agg=copy.deepcopy(self._agg),
             batch=copy.deepcopy(self.batcher.stats),
             sched=copy.deepcopy(self.scheduler.stats),
-            vt=getattr(self.scheduler, "vt", None),
+            vt=self.scheduler.vt,
             execs=dict(self._exec_stats),
             banks=[(b.tiles_served, b.rows_served, b.busy_cycles)
                    for b in self.pool.banks],
+            cache=self._cache.copy(),
+            lat=(list(self._latencies), self._lat_sum, self._lat_count),
+            # admission-policy state (watermark hysteresis, crossing count)
+            # is telemetry-visible, so it rolls back with everything else
+            policy=(None if self.scheduler.policy is None
+                    else copy.deepcopy(vars(self.scheduler.policy))),
         )
-        if inline_commits:
-            snap["cache"] = self._cache.copy()
-            snap["lat"] = (list(self._latencies), self._lat_sum,
-                           self._lat_count)
-        return snap
 
     def _restore_state(self, snap: dict) -> None:
         self._agg = snap["agg"]
@@ -243,40 +274,68 @@ class SortServeEngine:
                            (self.scheduler.stats, snap["sched"])):
             for f in dataclasses.fields(saved):
                 setattr(obj, f.name, getattr(saved, f.name))
-        if snap["vt"] is not None:
-            self.scheduler.vt = snap["vt"]
+        self.scheduler.vt = snap["vt"]
         self._exec_stats = snap["execs"]
         for bank, (t, r, c) in zip(self.pool.banks, snap["banks"]):
             bank.tiles_served, bank.rows_served, bank.busy_cycles = t, r, c
-        if "cache" in snap:
-            self._cache = snap["cache"]
-            lat, lat_sum, lat_count = snap["lat"]
-            self._latencies = deque(lat, maxlen=self._latencies.maxlen)
-            self._lat_sum, self._lat_count = lat_sum, lat_count
+        self._cache = snap["cache"]
+        lat, lat_sum, lat_count = snap["lat"]
+        self._latencies = deque(lat, maxlen=self._latencies.maxlen)
+        self._lat_sum, self._lat_count = lat_sum, lat_count
+        if snap["policy"] is not None:
+            # clear first: attributes the failed batch *created* (e.g. a
+            # lazily-initialized counter) must not survive the rollback
+            state = vars(self.scheduler.policy)
+            state.clear()
+            state.update(snap["policy"])
 
     # ------------------------------------------------------------- sessions
-    def begin(self, *, max_age_s: float | None = None,
-              strict: bool = True) -> "SortSession":
-        """Open a streaming session (requires ``continuous=True``).
+    def begin(self, *, max_age_s: float | None = None, strict: bool = True,
+              traffic_class: str | None = None) -> "SortSession":
+        """Open a streaming session.
 
         ``max_age_s`` bounds how long a request may wait for co-bucketed
         neighbours (age-based bucket closing in :meth:`SortSession.poll`);
         ``strict=False`` isolates tile execution failures to their own
-        requests instead of raising (the async front door's mode)."""
-        if not self.config.continuous:
-            raise ValueError(
-                "streaming sessions need the continuous scheduler; this "
-                "engine was built with EngineConfig(continuous=False)")
-        return SortSession(self, max_age_s=max_age_s, strict=strict)
+        requests instead of raising (the async front door's mode).
+
+        ``traffic_class`` names the session's workload: the cost policy
+        keeps a private measured-EMA prior for the class, and the executor
+        cache is prewarmed here with every tile signature the class's past
+        sessions produced, so the first tiles of this session land on warm
+        AOT executables instead of paying a compile."""
+        if traffic_class is not None:
+            self._prewarm(traffic_class)
+        return SortSession(self, max_age_s=max_age_s, strict=strict,
+                           traffic_class=traffic_class)
+
+    def _note_signature(self, traffic_class: str | None, sig: tuple) -> None:
+        """Record a tile signature in the class's prewarm menu."""
+        if traffic_class is not None:
+            self._class_menus.setdefault(traffic_class, set()).add(sig)
+
+    def _prewarm(self, traffic_class: str) -> None:
+        """AOT-compile executors for the class's recorded signature menu."""
+        with self._lock:
+            for sig in sorted(self._class_menus.get(traffic_class, ()),
+                              key=repr):
+                op, b, n, k, hint = sig
+                probe = Tile(op=op, data=np.zeros((b, n), np.uint32), k=k,
+                             entries=[], pad_rows=b, hint=hint)
+                try:
+                    backend = self.policy.choose(probe,
+                                                 traffic_class=traffic_class)
+                except (KeyError, ValueError):
+                    continue            # hint/op no longer servable: skip
+                if backend.warm(b, n, op, k):
+                    self._exec_stats["prewarmed"] += 1
 
     def submit(self, requests: list[SortRequest]) -> list[SortResponse]:
         """Serve a batch of requests; responses align with the input order.
 
-        On the continuous path this is a thin feed-then-drain wrapper over
-        one ephemeral session — same validation, same responses, same
-        all-or-nothing telemetry rollback as the wave path."""
-        if not self.config.continuous:
-            return self._submit_waves(requests)
+        A thin feed-then-drain wrapper over one ephemeral session — ingress
+        validation before any state changes, and all-or-nothing telemetry
+        rollback if the batch fails (or is shed) mid-flight."""
         with self._lock:
             self._validate_batch(requests)
             snap = self._snapshot_state()
@@ -291,67 +350,9 @@ class SortServeEngine:
             by_id = {resp.request_id: resp for resp in got}
             return [by_id[req.request_id] for req in requests]
 
-    def _submit_waves(self, requests: list[SortRequest]) -> list[SortResponse]:
-        """The legacy batch-synchronous path (EngineConfig.continuous=False)."""
-        t0 = self._clock()
-        self._validate_batch(requests)
-        # result cache: requests whose (payload, op, k, hint) was served
-        # before skip batching/execution entirely and are answered from the
-        # memo at the end (hit/miss counters only commit on success)
-        use_cache = self.config.cache_size > 0
-        hits: dict[int, SortResponse] = {}
-        misses: list[tuple[SortRequest, tuple | None]] = []
-        for req in requests:
-            key = self._cache_key(req) if use_cache else None
-            entry = self._cache.get(key) if use_cache else None
-            if entry is not None:
-                self._cache.move_to_end(key)
-                hits[req.request_id] = entry
-            else:
-                misses.append((req, key))
-        for req, _ in misses:
-            self.batcher.add(req)
-        # all telemetry rolls back if the batch fails mid-flight, so a
-        # partial execution never inflates counters relative to `requests`
-        # (tiles that did run are re-executed if the caller retries)
-        snap = self._snapshot_state(inline_commits=False)
-        try:
-            tiles = self.batcher.flush()
-            served = self.scheduler.run(tiles, self._execute)
-        except BaseException:
-            self._restore_state(snap)
-            raise
-        by_id: dict[int, SortResponse] = {}
-        t1 = self._clock()
-        for tile, result in served:
-            for resp in self._scatter(tile, result, lambda req: t1 - t0):
-                by_id[resp.request_id] = resp
-        if use_cache:
-            key_by_id = {req.request_id: key for req, key in misses}
-            for rid, resp in by_id.items():
-                # a response that failed oracle verification must not be
-                # replayed from the memo (hits skip the verify path)
-                if not resp.meta.get("verify_failed"):
-                    self._cache[key_by_id[rid]] = self._isolated_response(resp)
-            while len(self._cache) > self.config.cache_size:
-                self._cache.popitem(last=False)          # evict LRU
-        for req in requests:
-            entry = hits.get(req.request_id)
-            if entry is not None:
-                by_id[req.request_id] = self._isolated_response(
-                    entry, request_id=req.request_id, latency_s=t1 - t0,
-                    meta={**entry.meta, "cache_hit": True})
-        if use_cache:
-            self._agg["cache_hits"] += len(hits)
-            self._agg["cache_misses"] += len(misses)
-        self._agg["requests"] += len(requests)
-        self._latencies.extend([t1 - t0] * len(requests))
-        self._lat_sum += (t1 - t0) * len(requests)
-        self._lat_count += len(requests)
-        return [by_id[req.request_id] for req in requests]
-
-    def _execute(self, tile: Tile) -> TileResult:
-        backend = self.policy.choose(tile)
+    def _execute(self, tile: Tile,
+                 traffic_class: str | None = None) -> TileResult:
+        backend = self.policy.choose(tile, traffic_class=traffic_class)
         t0 = self._clock()
         result = backend.run(tile)
         result.meta["wall_s"] = self._clock() - t0
@@ -367,7 +368,7 @@ class SortServeEngine:
         if warm is not False:
             self.policy.observe(backend.name, tile.op, tile.shape[1],
                                 tile.shape[0], result.meta["wall_s"],
-                                k=tile.k)
+                                k=tile.k, traffic_class=traffic_class)
         pb = self._agg["per_backend"].setdefault(
             backend.name, {"tiles": 0, "requests": 0, "rows": 0,
                            "column_reads": 0, "wall_s": 0.0})
@@ -427,6 +428,7 @@ class SortServeEngine:
     def _executor_cache_stats(self) -> dict:
         hits, misses = self._exec_stats["hits"], self._exec_stats["misses"]
         return {"hits": hits, "misses": misses,
+                "prewarmed": self._exec_stats["prewarmed"],
                 "hit_rate": hits / max(1, hits + misses),
                 "size": EXECUTOR_CACHE.counters()[2]}
 
@@ -507,10 +509,12 @@ class SortSession:
     """
 
     def __init__(self, engine: SortServeEngine, *,
-                 max_age_s: float | None = None, strict: bool = True):
+                 max_age_s: float | None = None, strict: bool = True,
+                 traffic_class: str | None = None):
         self.engine = engine
         self.max_age_s = max_age_s
         self.strict = strict
+        self.traffic_class = traffic_class
         self._batcher = Batcher(engine.config.tile_rows,
                                 engine.config.min_bucket,
                                 stats=engine.batcher.stats)
@@ -526,7 +530,7 @@ class SortSession:
         self._failures: list[tuple[SortRequest, BaseException, int]] = []
         self._lat: deque = deque(maxlen=4096)
         self._stats = {"requests": 0, "completed": 0, "failed": 0,
-                       "cache_hits": 0, "tiles": 0}
+                       "shed": 0, "cache_hits": 0, "tiles": 0}
         self._sched0 = copy.deepcopy(engine.scheduler.stats)
 
     # -------------------------------------------------------------- ingress
@@ -566,6 +570,8 @@ class SortSession:
                 if use_cache:
                     e._agg["cache_misses"] += 1
                     self._keys[rid] = key
+                e._note_signature(self.traffic_class,
+                                  self._batcher.signature_of(req))
                 self._t_fed[rid] = now
                 self._outstanding.add(rid)
                 if isolate:
@@ -603,8 +609,10 @@ class SortSession:
             return self._take()
 
     def take_failures(self) -> list[tuple[SortRequest, BaseException, int]]:
-        """Isolated tile failures (``strict=False``): one entry per failed
-        request as ``(request, exception, co_batched_count)``."""
+        """Isolated tile failures and admission sheds: one entry per failed
+        request as ``(request, exception, co_batched_count)``; a shed
+        request's exception is a
+        :class:`~repro.sortserve.scheduler.ShedError`."""
         with self.engine._lock:
             out, self._failures = self._failures, []
             return out
@@ -621,21 +629,25 @@ class SortSession:
         e = self.engine
         if tiles:
             self._stats["tiles"] += len(tiles)
-            e.scheduler.feed(tiles, e._execute, sink=self._on_tile,
-                             strict=self.strict, owner=self)
+            e.scheduler.feed(
+                tiles,
+                lambda tile: e._execute(tile,
+                                        traffic_class=self.traffic_class),
+                sink=self._on_tile, strict=self.strict, owner=self)
             e.scheduler.pump()
 
     def _on_tile(self, tile: Tile, result, exc) -> None:
         e = self.engine
         if exc is not None:
             for req, _ in tile.entries:
-                # a failed request leaves the stream entirely — the front
-                # door may legitimately re-feed it (isolation retry), so
-                # every trace of it is pruned here
+                # a failed (or shed) request leaves the stream entirely —
+                # the front door may legitimately re-feed it (isolation
+                # retry / caller back-off), so every trace of it is pruned
                 self._outstanding.discard(req.request_id)
                 self._t_fed.pop(req.request_id, None)
                 self._keys.pop(req.request_id, None)
-                self._stats["failed"] += 1
+                self._stats["shed" if isinstance(exc, ShedError)
+                            else "failed"] += 1
                 self._failures.append((req, exc, len(tile.entries)))
             return
         now = e._clock()
@@ -685,6 +697,7 @@ class SortSession:
 
             return {
                 **self._stats,
+                "traffic_class": self.traffic_class,
                 "open_bucket_rows": self._batcher.pending(),
                 "in_flight": len(self._outstanding),
                 "latency_s": {
@@ -703,6 +716,8 @@ class SortSession:
                     "admissions": delta("admissions"),
                     "arrivals": delta("arrivals"),
                     "events": delta("events"),
+                    "deferred": delta("deferred"),
+                    "shed": delta("shed"),
                     "queue_wait_vt": delta("queue_wait_vt"),
                     "busy_bank_vt": delta("busy_bank_vt"),
                 },
@@ -729,25 +744,40 @@ class AsyncSortServe:
     a request co-bucketed with an offender is retried once in its own tile,
     so only the true offender's future errors — the same neighbour
     protection the micro-batching front door had.
+
+    **Backpressure** (PR 5): the front door is bounded instead of
+    unbounded-queueing.  ``max_inflight`` caps accepted-but-unresolved
+    futures — a submit over the cap fails immediately with
+    :class:`RetryAfter` (the inflight semaphore, without blocking the
+    caller) — and a request shed by the engine's admission policy under
+    overload resolves its future with :class:`RetryAfter` as well (no
+    isolation retry: re-feeding a shed request would just shed it again).
+    Both rejections are deterministic; a request is never silently dropped.
+    ``traffic_class`` is forwarded to the underlying session (per-class
+    cost priors + executor prewarming at construction).
     """
 
     _STOP = object()
 
     def __init__(self, engine: SortServeEngine, max_batch: int = 64,
-                 max_wait_ms: float = 2.0, *, clock=None):
-        if not engine.config.continuous:
-            raise ValueError(
-                "AsyncSortServe streams into the continuous scheduler; "
-                "this engine was built with EngineConfig(continuous=False)")
+                 max_wait_ms: float = 2.0, *, clock=None,
+                 max_inflight: int | None = None,
+                 traffic_class: str | None = None):
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 (or None: unbounded)")
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
+        self.max_inflight = max_inflight
         self._clock = clock if clock is not None else engine._clock
-        self.session = engine.begin(max_age_s=self.max_wait_s, strict=False)
+        self.session = engine.begin(max_age_s=self.max_wait_s, strict=False,
+                                    traffic_class=traffic_class)
         self._q: queue.Queue = queue.Queue()
         self._pending: dict[int, tuple[SortRequest, Future]] = {}
         self._retried: set[int] = set()
         self._lock = threading.Lock()
+        self._inflight = 0              # accepted futures not yet resolved
+        self.rejected = 0               # submits refused at the inflight cap
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -757,6 +787,17 @@ class AsyncSortServe:
         with self._lock:
             if self._closed:
                 raise RuntimeError("sort service closed")
+            if (self.max_inflight is not None
+                    and self._inflight >= self.max_inflight):
+                # the bounded-inflight semaphore: refuse deterministically
+                # instead of growing the queue/heap under overload
+                self.rejected += 1
+                self._resolve(fut, exc=RetryAfter(
+                    f"{self._inflight} requests in flight >= max_inflight="
+                    f"{self.max_inflight}; retry later",
+                    retry_after_s=self.max_wait_s))
+                return fut
+            self._inflight += 1
             # stamp arrival here, on the caller's side of the queue: bucket
             # age and latency count from submission, not collector pickup
             self._q.put((request, fut, self._clock()))
@@ -786,6 +827,12 @@ class AsyncSortServe:
         except InvalidStateError:
             pass
 
+    def _finish(self, fut: Future, resp=None, exc=None) -> None:
+        """Resolve an *accepted* future and release its inflight slot."""
+        self._resolve(fut, resp, exc)
+        with self._lock:
+            self._inflight -= 1
+
     # --------------------------------------------------------- stream plumbing
     def _feed_one(self, req: SortRequest, fut: Future,
                   at: float | None = None, isolate: bool = False) -> None:
@@ -794,7 +841,7 @@ class AsyncSortServe:
         if req.request_id in self._pending:
             # fail the newcomer directly: registering it would orphan the
             # in-flight request's future under the same id
-            self._resolve(fut, exc=ValueError(
+            self._finish(fut, exc=ValueError(
                 f"request_id {req.request_id} already in flight"))
             return
         self._pending[req.request_id] = (req, fut)
@@ -804,7 +851,7 @@ class AsyncSortServe:
                 now=self._clock() if at is None else at)
         except Exception as exc:
             self._pending.pop(req.request_id, None)
-            self._resolve(fut, exc=exc)
+            self._finish(fut, exc=exc)
             return
         self._deliver(done)
 
@@ -813,13 +860,21 @@ class AsyncSortServe:
             item = self._pending.pop(resp.request_id, None)
             if item is not None:
                 self._retried.discard(resp.request_id)
-                self._resolve(item[1], resp)
+                self._finish(item[1], resp)
         for req, exc, co_batched in self.session.take_failures():
             rid = req.request_id
             item = self._pending.get(rid)
             if item is None:
                 continue
-            if co_batched > 1 and rid not in self._retried:
+            if isinstance(exc, ShedError):
+                # admission-policy backpressure: deterministic caller-visible
+                # deferral; a retry here would re-enter the overloaded queue
+                self._pending.pop(rid)
+                self._retried.discard(rid)
+                retry = RetryAfter(str(exc), retry_after_s=self.max_wait_s)
+                retry.__cause__ = exc
+                self._finish(item[1], exc=retry)
+            elif co_batched > 1 and rid not in self._retried:
                 # the failure may belong to a co-bucketed neighbour: retry
                 # in a private tile (isolate=True) so only the true
                 # offender's future errors and no open bucket closes early
@@ -829,7 +884,7 @@ class AsyncSortServe:
             else:
                 self._pending.pop(rid)
                 self._retried.discard(rid)
-                self._resolve(item[1], exc=exc)
+                self._finish(item[1], exc=exc)
 
     def _pump(self) -> None:
         self._deliver(self.session.poll(self._clock()))
@@ -857,6 +912,9 @@ class AsyncSortServe:
                 req, fut, at = item
                 if not fut.cancelled():
                     self._feed_one(req, fut, at)
+                else:
+                    with self._lock:      # caller bailed: free its slot
+                        self._inflight -= 1
                 ingested += 1
                 if ingested >= self.max_batch:
                     break
@@ -877,8 +935,11 @@ class AsyncSortServe:
             req, fut, at = item
             if not fut.cancelled():
                 self._feed_one(req, fut, at)
+            else:
+                with self._lock:
+                    self._inflight -= 1
         self._deliver(self.session.drain())
         for rid, (req, fut) in list(self._pending.items()):
             self._pending.pop(rid)
-            self._resolve(fut, exc=RuntimeError(
+            self._finish(fut, exc=RuntimeError(
                 f"request {rid} left unserved at close"))

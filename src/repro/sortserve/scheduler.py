@@ -13,57 +13,54 @@ sorter.  The serving analogue implemented here:
   * readiness mirrors the manager's gating: each shard bank raises a local
     ``loaded`` bit, the manager AND-combines them into tile-ready and
     OR-combines all tiles' bits into pool-busy (`any_pending`);
-  * a **drain policy** for oversized work: when a tile needs more banks or
-    row-slots than are currently free, placed tiles are executed and
-    retired oldest-first until it fits; a tile wider than the whole pool
-    (``shards > banks``) is executed in ``ceil(shards / banks)`` waves with
-    every bank enlisted — the §IV behaviour of a dataset larger than the
-    total bank capacity;
-  * **mid-wave admission**: when the final wave of an oversized tile is
-    partial (``shards % banks != 0``), the banks it does not need free one
-    wave early — the scheduler releases them the moment the last wave
-    starts and admits queued tiles onto them instead of waiting for the
-    whole tile to retire (the first step toward continuous batching; the
-    drain policy itself — oldest-first retirement — is unchanged).
+  * an oversized tile (``shards > banks``) needs the pool fully idle and is
+    executed in ``ceil(shards / banks)`` waves with every bank enlisted —
+    the §IV behaviour of a dataset larger than the total bank capacity; its
+    partial final wave frees the banks it does not need one wave early.
 
-Execution itself is delegated to a callback (the engine binds it to the
-cost policy + backend registry), so the scheduler is backend-agnostic and
-deterministic: tiles retire in FIFO order within each drain.
-
-Cycle accounting: all banks in a shard group step their column registers
-together (CR enables are OR-combined), so a tile's simulated cycle count is
-charged to *every* bank in its group — matching §V.C's result that
-multi-bank management changes area/power, never latency.
-
-Continuous operation (PR 4)
----------------------------
-
-:class:`Scheduler` above runs the pool in lock-step waves: every batch is a
-global flush barrier, and banks freed by a short tile idle until the whole
-batch retires.  :class:`ContinuousScheduler` replaces the wave loop with an
+Since PR 5 the event-driven :class:`ContinuousScheduler` is the ONLY
+scheduler (the legacy batch-synchronous wave loop was removed; its flushed
+behaviour is pinned by recorded golden telemetry in
+``tests/golden/continuous_telemetry.json``).  It runs the pool on an
 explicit **event clock** — a virtual-time heap of tile-arrival, bank-drain
-(early-release), and tile-retire events, with durations in modeled hardware
-cycles:
+(early-release), and tile-retire events:
 
   * a tile is *admitted* (placed + executed) the moment enough banks have
     drained — at its arrival event if the pool has room, otherwise at the
     first early-release/retire event that frees its shard group;
-  * an oversized tile's partial final wave schedules an early-release event
-    one wave before its retire event, so the PR-3 mid-wave admission is now
-    just the general admission rule rather than a special case;
-  * queued tiles admit FIFO with best-effort skip-scan (a tile that does not
-    fit never blocks a later one that does — the same policy the mid-wave
-    backfill used), and every retire frees banks for the queue immediately,
-    with **no epoch boundary** between batches.
+  * queued tiles admit FIFO with best-effort skip-scan (a tile that does
+    not fit never blocks a later one that does), and every retire frees
+    banks for the queue immediately, with **no epoch boundary**;
+  * an :class:`AdmissionPolicy` (PR 5) is evaluated at every arrival event
+    and may *accept*, *defer* (re-schedule the arrival with a deadline), or
+    *shed* (fail the tile deterministically with :class:`ShedError`) — the
+    overload control that keeps the event heap and admission queue bounded
+    when offered load exceeds pool capacity.
 
-Virtual time is the §V cycle domain: a tile's service duration per wave is
-its summed exact cycle telemetry (falling back to the §V cost-model estimate
-for backends that do not simulate cycles), so queue waits, latencies, and
-occupancy read directly as modeled-hardware quantities and the whole event
-loop is deterministic — no wall-clock sleeps anywhere.  Values, order, CR,
-and cycle telemetry are bit-identical to the wave scheduler for any given
-tile (execution is the same callback); what changes is *when* banks are
-granted, which the ``continuous`` telemetry section reports.
+Event-model invariants (pinned by tests/test_continuous.py and
+tests/test_overload.py)
+-----------------------------------------------------------------------
+
+1. **Virtual-time units.**  The event clock ``vt`` advances in *modeled
+   hardware cycles* (the §V cycle domain): a tile's per-wave service
+   duration is its summed exact cycle telemetry, falling back to the §V
+   cost-model estimate for backends that do not simulate cycles.  No event
+   ever fires at a ``vt`` lower than the current clock; the loop is
+   deterministic and sleep-free.
+2. **Bank-cycle conservation.**  All banks in a shard group step their
+   column registers together (CR enables are OR-combined), so a tile's
+   cycle count is charged to *every* bank of its group, once per wave —
+   matching §V.C's result that multi-bank management changes area/power,
+   never latency.  Pool-wide ``busy_cycles`` therefore depends only on the
+   tile set, not on arrival order or admission times.
+3. **Owner-scoped abort.**  :meth:`ContinuousScheduler.abort` evicts
+   exactly the queued + in-flight tiles fed under one ``owner`` token
+   (banks released with no telemetry credit, pending events cancelled in
+   place); co-resident owners — other streaming sessions — are untouched.
+4. **Exactly-once sinks.**  Every fed tile's ``sink`` is called exactly
+   once: at its retire event, at its execution failure, or at its shed
+   decision (with :class:`ShedError`); a shed or failed tile is consumed,
+   never silently dropped or re-executed.
 """
 
 from __future__ import annotations
@@ -75,8 +72,9 @@ from typing import Callable
 
 from .batcher import Tile
 
-__all__ = ["BankPool", "ContinuousScheduler", "ContinuousStats",
-           "LogicalBank", "Scheduler", "SchedulerStats"]
+__all__ = ["ACCEPT", "AdmissionPolicy", "BankPool", "ContinuousScheduler",
+           "ContinuousStats", "DEFER", "LogicalBank", "SHED",
+           "SchedulerStats", "ShedError", "WatermarkPolicy"]
 
 
 @dataclass
@@ -204,127 +202,125 @@ class BankPool:
 
 @dataclass
 class SchedulerStats:
+    """Admission/placement counters shared by pool-level telemetry."""
+
     tiles: int = 0
-    drains: int = 0
+    drains: int = 0                 # retire events (every retire is a drain)
     oversized_tiles: int = 0
     oversized_waves: int = 0
     max_banks_in_flight: int = 0
     mid_wave_admissions: int = 0    # tiles admitted onto early-freed banks
 
 
-class Scheduler:
-    """FIFO tile scheduler over a :class:`BankPool`."""
+# --------------------------------------------------------------------------
+# Overload control: admission policies
+# --------------------------------------------------------------------------
 
-    def __init__(self, pool: BankPool):
-        self.pool = pool
-        self.stats = SchedulerStats()
+ACCEPT, DEFER, SHED = "accept", "defer", "shed"
 
-    def run(self, tiles: list[Tile],
-            execute: Callable[[Tile], object]) -> list[tuple[Tile, object]]:
-        """Serve every tile; returns (tile, backend result) in retire order."""
-        results: list[tuple[Tile, object]] = []
-        placed: list[_Placement] = []
-        pending = list(tiles)
-        ids = iter(range(1 << 30))
 
-        def record(pl: _Placement) -> None:
-            placed.append(pl)
-            self.stats.tiles += 1
-            if pl.waves > 1:
-                self.stats.oversized_tiles += 1
-                self.stats.oversized_waves += pl.waves
-            in_flight = sum(1 for b in self.pool.banks if b.loaded)
-            self.stats.max_banks_in_flight = max(
-                self.stats.max_banks_in_flight, in_flight)
+class ShedError(RuntimeError):
+    """A tile refused by the admission policy under overload.
 
-        def drain_one(held: Tile | None = None,
-                      count_event: bool = True) -> _Placement | None:
-            """Execute + retire the oldest placement (the drain policy).
+    Delivered deterministically — to the tile's sink (``strict=False``
+    sessions surface it via ``take_failures``; the async front door maps it
+    onto the caller's future) or raised out of ``pump`` for strict feeds.
+    ``retry_after_vt`` is the policy's suggested back-off in virtual cycles.
+    """
 
-            When its final wave is partial, the banks that wave does not
-            need are released the moment the last wave starts, and queued
-            tiles — the held (unplaceable) tile first, then pending in FIFO
-            order — are admitted onto them mid-wave instead of waiting for
-            the full retire.  Returns the held tile's placement if it was
-            admitted this way.  ``stats.drains`` counts drain *events* (one
-            forced drain, or the whole final flush), not tiles retired."""
-            if count_event:
-                self.stats.drains += 1
-            pl = placed[0]                    # oldest-first
-            assert self.pool.ready(pl), "executed a tile before all banks loaded"
-            result = execute(pl.tile)
-            cycles = getattr(result, "cycles", None)
-            total = int(cycles.sum()) if cycles is not None else None
-            held_pl = None
-            if pl.waves > 1 and pl.early_banks:
-                self.pool.release_early(pl, total)     # final wave begins
-                if held is not None:
-                    held_pl = self.pool.try_place(held, next(ids))
-                    if held_pl is not None:
-                        record(held_pl)
-                        self.stats.mid_wave_admissions += 1
-                i = 0                          # best-effort FIFO backfill
-                while i < len(pending):
-                    p2 = self.pool.try_place(pending[i], next(ids))
-                    if p2 is not None:
-                        record(p2)
-                        self.stats.mid_wave_admissions += 1
-                        pending.pop(i)
-                    else:
-                        i += 1
-            self.pool.retire(pl, total)
-            placed.pop(0)                     # only after banks are released
-            results.append((pl.tile, result))
-            return held_pl
+    def __init__(self, message: str, retry_after_vt: float = 0.0):
+        super().__init__(message)
+        self.retry_after_vt = float(retry_after_vt)
 
-        try:
-            while pending:
-                tile = pending.pop(0)
-                pl = self.pool.try_place(tile, next(ids))
-                if pl is not None:
-                    record(pl)
-                while pl is None:
-                    if not placed:            # idle pool and still no fit
-                        raise ValueError(
-                            f"tile {tile.shape} cannot be placed even on an "
-                            f"idle pool: need bank_rows >= {tile.shape[0]} "
-                            f"(have {self.pool.banks[0].bank_rows})")
-                    pl = drain_one(held=tile)   # frees the oldest shard group
-                    if pl is None:
-                        pl = self.pool.try_place(tile, next(ids))
-                        if pl is not None:
-                            record(pl)
-            if placed:
-                self.stats.drains += 1        # the final flush: one event
-                while placed:
-                    drain_one(count_event=False)
-        except BaseException:
-            # a failed batch must not poison the pool: release whatever is
-            # still loaded (no telemetry credit) before propagating
-            for pl in placed:
-                b_rows = pl.tile.shape[0]
-                for i in pl.bank_ids:
-                    bank = self.pool.banks[i]
-                    if pl.tile_id in bank.loaded:
-                        bank.release(pl.tile_id, b_rows)
-            raise
-        assert not self.pool.any_pending(), "banks left loaded after final drain"
-        return results
 
-    def telemetry(self) -> dict:
-        return {
-            "tiles": self.stats.tiles,
-            "drains": self.stats.drains,
-            "oversized_tiles": self.stats.oversized_tiles,
-            "oversized_waves": self.stats.oversized_waves,
-            "max_banks_in_flight": self.stats.max_banks_in_flight,
-            "mid_wave_admissions": self.stats.mid_wave_admissions,
-            "banks": [
-                {"index": b.index, "tiles_served": b.tiles_served,
-                 "rows_served": b.rows_served, "busy_cycles": b.busy_cycles}
-                for b in self.pool.banks
-            ],
-        }
+class AdmissionPolicy:
+    """Decide the fate of each tile at its arrival event.
+
+    :meth:`decide` is called once per processed arrival (first arrival and
+    every deferred re-arrival) with the scheduler's load signals and must
+    return ``(action, retry_after_vt)`` where action is :data:`ACCEPT`,
+    :data:`DEFER` (re-schedule the arrival ``retry_after_vt`` virtual cycles
+    later), or :data:`SHED` (fail the tile with :class:`ShedError`).
+
+    Policies may keep state; ``crossings`` is read into telemetry as
+    ``high_watermark_crossings`` (count of entries into the overloaded
+    regime).  The default policy accepts everything.
+    """
+
+    crossings: int = 0
+
+    def decide(self, *, depth: int, occupancy: float, vt: float,
+               waited_vt: float, defers: int) -> tuple[str, float]:
+        return (ACCEPT, 0.0)
+
+
+@dataclass
+class WatermarkPolicy(AdmissionPolicy):
+    """Queue-depth / occupancy watermarks with hysteresis.
+
+    The scheduler is *overloaded* once the admission queue reaches
+    ``high_watermark`` tiles (or, when ``occupancy_high`` is set, the pool
+    occupancy reaches it while a queue exists), and stays overloaded until
+    the queue falls back to ``low_watermark`` (default: half the high mark).
+    While overloaded:
+
+      * ``shed=True`` — new arrivals are shed outright (:class:`ShedError`
+        with ``retry_after_vt`` as the suggested back-off);
+      * ``shed=False`` — new arrivals are deferred: their arrival event is
+        re-scheduled ``retry_after_vt`` virtual cycles later, up to
+        ``deadline_vt`` of total waiting, after which the tile is accepted
+        unconditionally — **no tile is ever lost when shedding is off**.
+
+    ``crossings`` counts transitions into the overloaded regime and is
+    monotone in offered load for a fixed trace prefix (pinned by
+    tests/test_overload.py).
+    """
+
+    high_watermark: int = 64
+    low_watermark: int | None = None
+    occupancy_high: float | None = None
+    shed: bool = False
+    retry_after_vt: float = 4096.0
+    deadline_vt: float = 1 << 20
+    crossings: int = field(default=0, init=False)
+    _over: bool = field(default=False, init=False, repr=False)
+
+    def __post_init__(self):
+        if self.high_watermark < 1:
+            raise ValueError("high_watermark must be >= 1")
+        low = (self.high_watermark // 2 if self.low_watermark is None
+               else self.low_watermark)
+        if not 0 <= low < self.high_watermark:
+            raise ValueError(
+                f"low_watermark={low} must be in [0, high_watermark)")
+        if self.occupancy_high is not None and \
+                not 0.0 < self.occupancy_high <= 1.0:
+            raise ValueError(
+                f"occupancy_high={self.occupancy_high} must be in (0, 1]")
+        # instance attributes throughout (init=False defaults stay
+        # class-level): the engine snapshots/restores policy state via vars()
+        self._low = low
+        self.crossings = 0
+        self._over = False
+
+    def decide(self, *, depth: int, occupancy: float, vt: float,
+               waited_vt: float, defers: int) -> tuple[str, float]:
+        low = self._low
+        over_now = depth >= self.high_watermark or (
+            self.occupancy_high is not None
+            and occupancy >= self.occupancy_high and depth > 0)
+        if self._over and depth <= low and not over_now:
+            self._over = False
+        if not self._over and over_now:
+            self._over = True
+            self.crossings += 1
+        if not self._over:
+            return (ACCEPT, 0.0)
+        if self.shed:
+            return (SHED, self.retry_after_vt)
+        if waited_vt >= self.deadline_vt:
+            return (ACCEPT, 0.0)        # deadline reached: never lose it
+        return (DEFER, self.retry_after_vt)
 
 
 # --------------------------------------------------------------------------
@@ -333,17 +329,18 @@ class Scheduler:
 
 @dataclass
 class ContinuousStats(SchedulerStats):
-    """Wave-scheduler counters plus the event-clock quantities.
+    """Placement counters plus the event-clock and overload quantities.
 
-    ``drains`` is redefined the natural continuous way: every retire *is* a
-    drain event (there are no batch flushes to count).  Virtual-time fields
-    are in modeled hardware cycles."""
+    Virtual-time fields are in modeled hardware cycles; ``drains`` counts
+    retire events (every retire is a drain — there are no batch flushes)."""
 
     arrivals: int = 0
     admissions: int = 0             # == tiles; kept for symmetry with queue
     events: int = 0                 # heap events processed
     exec_failures: int = 0          # failed tile executions (either mode)
     queued_peak: int = 0
+    deferred: int = 0               # admission-policy deferrals (re-arrivals)
+    shed: int = 0                   # admission-policy rejections
     queue_wait_vt: float = 0.0      # sum over admitted tiles of admit - arrive
     busy_bank_vt: float = 0.0       # integral of bank-busy virtual time
     makespan_vt: float = 0.0        # vt of the latest retire
@@ -362,6 +359,7 @@ class _Job:                             # from lists and compared by object
     strict: bool                    # True: execute errors propagate (+ abort)
     owner: object                   # abort()/session scope token
     arrive_vt: float
+    defers: int = 0                 # admission-policy deferrals so far
     cancelled: bool = False
 
 
@@ -380,28 +378,34 @@ class _Flight:
 class ContinuousScheduler:
     """Event-driven bank scheduler: admission the moment banks drain.
 
-    The persistent replacement for :meth:`Scheduler.run`'s wave loop (see
-    module docstring).  Tiles are fed at any time (:meth:`feed`), optionally
-    with explicit virtual arrival times; :meth:`pump` advances the event
-    clock until every scheduled event has fired.  Execution happens at
-    admission (software results are available immediately); bank occupancy,
-    queue waits, and latency follow the virtual clock in modeled hardware
-    cycles, so the whole loop is deterministic and sleep-free.
+    Tiles are fed at any time (:meth:`feed`), optionally with explicit
+    virtual arrival times; :meth:`pump` advances the event clock until every
+    scheduled event has fired.  Execution happens at admission (software
+    results are available immediately); bank occupancy, queue waits, and
+    latency follow the virtual clock in modeled hardware cycles, so the
+    whole loop is deterministic and sleep-free (see the module docstring's
+    invariants).
 
-    ``sink(tile, result, exc)`` is called once per tile at its retire event
-    (or at its failure, with ``exc`` set, when fed with ``strict=False``).
-    ``owner`` scopes :meth:`abort`: a failed engine batch can evict exactly
-    its own tiles — queued and in-flight — without touching co-resident
-    streaming sessions.
+    ``sink(tile, result, exc)`` is called exactly once per tile — at its
+    retire event, at its execution failure (``strict=False``), or at its
+    shed decision (``exc`` a :class:`ShedError`).  ``owner`` scopes
+    :meth:`abort`: a failed engine batch can evict exactly its own tiles —
+    queued and in-flight — without touching co-resident streaming sessions.
 
-    :meth:`run` keeps the wave scheduler's call shape (feed everything now,
-    pump to quiescence, return ``(tile, result)`` pairs) so flushed
-    workloads go through the identical admission machinery the streaming
-    path uses — the parity tests drive both schedulers through it.
+    ``policy`` (an :class:`AdmissionPolicy`) is evaluated at every arrival
+    event and may defer or shed tiles under overload; ``None`` accepts
+    everything — the heap then grows with whatever the callers feed.
+
+    :meth:`run` keeps the flushed call shape (feed everything now, pump to
+    quiescence, return ``(tile, result)`` pairs) for batch workloads; its
+    behaviour is pinned by recorded golden telemetry in
+    ``tests/golden/continuous_telemetry.json``.
     """
 
-    def __init__(self, pool: BankPool):
+    def __init__(self, pool: BankPool, *,
+                 policy: AdmissionPolicy | None = None):
         self.pool = pool
+        self.policy = policy
         self.stats = ContinuousStats()
         self.vt = 0.0                       # the event clock (virtual cycles)
         self._heap: list = []               # (t, seq, kind, payload)
@@ -433,8 +437,9 @@ class ContinuousScheduler:
         """Fire events in virtual-time order until the heap is empty.
 
         Returns the number of events processed.  Raises the execute
-        exception of a ``strict`` tile (after releasing its banks); a
-        non-strict tile's failure goes to its sink instead."""
+        exception of a ``strict`` tile (after releasing its banks) and the
+        :class:`ShedError` of a strict shed tile; a non-strict tile's
+        failure or shed goes to its sink instead."""
         fired = 0
         while self._heap or self._queue:
             if not self._heap:
@@ -451,12 +456,7 @@ class ContinuousScheduler:
             fired += 1
             self.stats.events += 1
             if kind == _ARRIVE:
-                self.stats.arrivals += 1
-                payload.arrive_vt = max(payload.arrive_vt, self.vt)
-                if self._queue or not self._try_admit(payload):
-                    self._queue.append(payload)
-                    self.stats.queued_peak = max(self.stats.queued_peak,
-                                                 len(self._queue))
+                self._on_arrive(payload)
             elif kind == _EARLY:
                 pl = payload.placement
                 self.pool.release_early(pl, payload.total_cycles)
@@ -479,6 +479,40 @@ class ContinuousScheduler:
                     fl.job.sink(fl.job.tile, fl.result, None)
                 self._drain_queue(mid_wave=False)
         return fired
+
+    def _on_arrive(self, job: _Job) -> None:
+        """One arrival event: admission-policy gate, then admit or queue."""
+        if job.defers == 0:                 # deferred re-arrivals count once
+            self.stats.arrivals += 1
+            job.arrive_vt = max(job.arrive_vt, self.vt)
+        action, retry = ACCEPT, 0.0
+        if self.policy is not None:
+            busy = sum(1 for b in self.pool.banks if b.loaded)
+            action, retry = self.policy.decide(
+                depth=len(self._queue),
+                occupancy=busy / len(self.pool.banks),
+                vt=self.vt, waited_vt=self.vt - job.arrive_vt,
+                defers=job.defers)
+        if action == SHED:
+            self.stats.shed += 1
+            exc = ShedError(
+                f"admission shed at queue depth {len(self._queue)} "
+                f"(vt={self.vt:.0f})", retry_after_vt=retry)
+            if job.sink is not None:
+                job.sink(job.tile, None, exc)
+            if job.strict:
+                raise exc
+            return
+        if action == DEFER:
+            self.stats.deferred += 1
+            job.defers += 1
+            heapq.heappush(self._heap, (self.vt + max(retry, 1.0),
+                                        next(self._seq), _ARRIVE, job))
+            return
+        if self._queue or not self._try_admit(job):
+            self._queue.append(job)
+            self.stats.queued_peak = max(self.stats.queued_peak,
+                                         len(self._queue))
 
     # ----------------------------------------------------------- admission
     def _try_admit(self, job: _Job) -> bool:
@@ -530,11 +564,11 @@ class ContinuousScheduler:
         An oversized head (wider than the whole pool) holds the door: it
         needs the pool fully idle, and admitting later tiles around it
         forever would starve it — so nothing behind it is admitted until it
-        places, the continuous analogue of the wave scheduler's forced
-        drain-until-fit.  A merely-large (but poolable) head is retried
-        first at every drain event, so it admits as soon as its shard group
-        frees; skip-scan behind it trades strict FIFO for bank utilization,
-        the usual continuous-batching compromise."""
+        places, the continuous analogue of a forced drain-until-fit.  A
+        merely-large (but poolable) head is retried first at every drain
+        event, so it admits as soon as its shard group frees; skip-scan
+        behind it trades strict FIFO for bank utilization, the usual
+        continuous-batching compromise."""
         progress = True
         while progress:
             progress = False
@@ -600,13 +634,13 @@ class ContinuousScheduler:
         """True when no event, queued tile, or in-flight tile remains."""
         return not (self._heap or self._queue or self._inflight)
 
-    # --------------------------------------------- wave-compatible frontend
+    # ------------------------------------------------- flushed-batch frontend
     def run(self, tiles: list[Tile],
             execute: Callable[[Tile], object]) -> list[tuple[Tile, object]]:
         """Flushed-workload frontend: feed everything now, pump to
-        quiescence, return ``(tile, result)`` in retire order — the same
-        call shape as :meth:`Scheduler.run`, through the identical
-        event-clock admission path the streaming API uses."""
+        quiescence, return ``(tile, result)`` in retire order — the batch
+        call shape, through the identical event-clock admission path the
+        streaming API uses."""
         results: list[tuple[Tile, object]] = []
         token = object()
         try:
@@ -645,7 +679,12 @@ class ContinuousScheduler:
                 "admissions": s.admissions,
                 "events": s.events,
                 "exec_failures": s.exec_failures,
+                "queue_depth": len(self._queue),
                 "queued_peak": s.queued_peak,
+                "deferred": s.deferred,
+                "shed": s.shed,
+                "high_watermark_crossings": getattr(self.policy,
+                                                    "crossings", 0),
                 "queue_wait_vt": s.queue_wait_vt,
                 "busy_bank_vt": s.busy_bank_vt,
                 "makespan_vt": s.makespan_vt,

@@ -1,18 +1,30 @@
 """Continuous serving core: event-clock scheduler, sessions, async streaming.
 
-The PR-4 acceptance surface:
+The acceptance surface:
 
-  * **parity** — a flushed (all-at-once) workload served by the continuous
-    engine is bit-identical to the legacy wave engine on values, order
-    (indices), CR, and cycle telemetry, per request and in aggregate, and
-    bank-cycle accounting is conserved across the two schedulers;
+  * **golden parity** — a flushed (all-at-once) workload served by the
+    continuous engine matches the recorded golden telemetry in
+    ``tests/golden/continuous_telemetry.json`` bit-exactly on values, order
+    (indices), CR, and cycle telemetry, per request and in aggregate.  The
+    golden file was recorded while the legacy wave scheduler still existed
+    and the two paths were asserted bit-identical, so it pins the wave
+    semantics the continuous core replaced (regenerate with
+    ``PYTHONPATH=src python scripts/record_golden.py`` after an intentional
+    behaviour change);
   * **arrival patterns** — bursty / trickle / mixed-width streams through
-    the session API match the numpy oracle and conserve bank cycles;
+    the session API match the numpy oracle and conserve bank-cycle
+    accounting against a flushed-batch engine fed the same chunks;
   * **event clock** — admissions happen at drain/early-release events, the
-    legacy mid-wave case included, all in deterministic virtual time;
+    mid-wave case included, all in deterministic virtual time;
   * **clock injection** — age-based bucket closing and the async front door
-    are reproducible with a fake clock, no sleeps anywhere.
+    are reproducible with a fake clock, no sleeps anywhere;
+  * **sessions with a traffic class** — per-class cost-policy priors and
+    executor prewarming at ``begin()``.
 """
+
+import hashlib
+import json
+import pathlib
 
 import numpy as np
 import pytest
@@ -26,11 +38,12 @@ from repro.sortserve import (
     Batcher,
     ContinuousScheduler,
     EngineConfig,
-    Scheduler,
     SortRequest,
     SortServeEngine,
 )
 from repro.sortserve.batcher import Tile
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "continuous_telemetry.json"
 
 
 class FakeClock:
@@ -45,11 +58,11 @@ class FakeClock:
         return self.t
 
 
-def make_engine(continuous=True, clock=None, **over):
+def make_engine(clock=None, **over):
     cfg = dict(backends=("colskip", "radix_topk", "jaxsort", "numpy"),
                tile_rows=4, min_bucket=8, banks=4, bank_width=64,
                bank_rows=4, sim_width_cap=128, cache_size=0,
-               adaptive_policy=False, continuous=continuous)
+               adaptive_policy=False)
     cfg.update(over)
     return SortServeEngine(EngineConfig(**cfg), clock=clock)
 
@@ -78,59 +91,74 @@ def _bank_totals(engine) -> tuple[int, int, int]:
             sum(b["busy_cycles"] for b in t))
 
 
-# ----------------------------------------------------------------- parity
-def test_flushed_workload_parity_with_wave_scheduler():
-    """Acceptance: a flushed workload through the continuous engine matches
-    the legacy wave engine bit-exactly on values, order, CR, and cycles —
-    per request and in aggregate — and conserves bank-cycle accounting."""
+# ---------------------------------------------------------- golden parity
+def _digest(arr) -> str | None:
+    if arr is None:
+        return None
+    h = hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+    return f"{h}:{arr.dtype}:{arr.shape}"
+
+
+def golden_payload() -> dict:
+    """The recorded-telemetry surface: the seed-21 flushed workload's
+    per-response values/order/CR/cycle digests plus aggregate telemetry.
+    ``scripts/record_golden.py`` dumps this to the golden file."""
     reqs = make_workload(40, min_len=8, max_len=128, seed=21)
-    cont, wave = make_engine(True), make_engine(False)
-    # identical request objects through both engines (payloads are read-only
-    # for the engine; ids match so responses pair up exactly)
-    got_c = cont.submit(reqs)
-    got_w = wave.submit(reqs)
-    for rc, rw in zip(got_c, got_w):
-        assert rc.request_id == rw.request_id
-        assert rc.backend == rw.backend
-        assert rc.cycles == rw.cycles
-        assert rc.column_reads == rw.column_reads
-        assert rc.bucket_shape == rw.bucket_shape
-        if rc.values is not None or rw.values is not None:
-            assert np.array_equal(rc.values, rw.values)
-        if rc.indices is not None or rw.indices is not None:
-            assert np.array_equal(rc.indices, rw.indices)
-    tc, tw = cont.telemetry(), wave.telemetry()
-    assert tc["column_reads"] == tw["column_reads"]
-    assert tc["cycles_exact"] == tw["cycles_exact"]
-    assert tc["cycles_estimated"] == tw["cycles_estimated"]
-    assert tc["scheduler"]["tiles"] == tw["scheduler"]["tiles"]
-    # conservation: both schedulers charge every tile cycles x waves to each
-    # bank of its shard group, so pool-wide totals agree even though *which*
-    # bank served which tile may differ
-    assert _bank_totals(cont) == _bank_totals(wave)
-    assert all(b.free_rows == b.bank_rows for b in cont.pool.banks)
+    eng = make_engine()
+    got = eng.submit(reqs)
+    telem = eng.telemetry()
+    return {
+        "responses": [
+            {"backend": r.backend, "cycles": r.cycles,
+             "column_reads": r.column_reads,
+             "bucket_shape": list(r.bucket_shape),
+             "values": _digest(r.values), "indices": _digest(r.indices)}
+            for r in got],
+        "aggregate": {
+            "column_reads": telem["column_reads"],
+            "cycles_exact": telem["cycles_exact"],
+            "cycles_estimated": telem["cycles_estimated"],
+            "tiles": telem["scheduler"]["tiles"],
+            "bank_totals": list(_bank_totals(eng)),
+        },
+    }
 
 
-def test_scheduler_level_parity_preloaded_queue():
-    """ContinuousScheduler.run on a preloaded queue reproduces the wave
-    scheduler's per-tile results and conserves bank-cycle totals."""
+def test_flushed_workload_matches_recorded_golden():
+    """Acceptance: the continuous engine reproduces the recorded golden
+    telemetry bit-exactly — values, order, CR, cycles, and pool-wide bank
+    accounting.  The golden file was recorded while the legacy wave
+    scheduler still existed and both paths were asserted bit-identical, so
+    this pins the flushed-batch semantics across the wave removal."""
+    assert GOLDEN.exists(), \
+        "golden missing; run PYTHONPATH=src python scripts/record_golden.py"
+    live = json.loads(json.dumps(golden_payload()))  # normalize types
+    recorded = json.loads(GOLDEN.read_text())
+    assert live["aggregate"] == recorded["aggregate"]
+    assert len(live["responses"]) == len(recorded["responses"])
+    for i, (lv, rc) in enumerate(zip(live["responses"],
+                                     recorded["responses"])):
+        assert lv == rc, f"response {i} diverged from golden"
+
+
+def test_scheduler_level_preloaded_queue_matches_recorded_totals():
+    """ContinuousScheduler.run on a preloaded queue reproduces the recorded
+    pool-wide totals (bank-cycle conservation: recorded while the wave
+    scheduler existed and both schedulers were asserted equal on them)."""
     widths = [128, 32, 64, 256, 32, 128, 64]
-    ex_c, ex_w = CountingExec(), CountingExec()
-    pool_c = BankPool(banks=3, bank_width=32, bank_rows=4)
-    pool_w = BankPool(banks=3, bank_width=32, bank_rows=4)
-    res_c = ContinuousScheduler(pool_c).run([_raw_tile(w) for w in widths],
-                                            ex_c)
-    res_w = Scheduler(pool_w).run([_raw_tile(w) for w in widths], ex_w)
-    assert sorted(t.shape for t, _ in res_c) == sorted(t.shape
-                                                       for t, _ in res_w)
-    assert sorted(ex_c.calls) == sorted(ex_w.calls)     # same work executed
-    for pool in (pool_c, pool_w):
-        assert all(b.free_rows == b.bank_rows for b in pool.banks)
-    total = lambda pool: sum(b.busy_cycles for b in pool.banks)
-    assert total(pool_c) == total(pool_w)
-    served = lambda pool: (sum(b.tiles_served for b in pool.banks),
-                           sum(b.rows_served for b in pool.banks))
-    assert served(pool_c) == served(pool_w)
+    ex = CountingExec()
+    pool = BankPool(banks=3, bank_width=32, bank_rows=4)
+    res = ContinuousScheduler(pool).run([_raw_tile(w) for w in widths], ex)
+    assert sorted(t.shape for t, _ in res) == sorted(
+        (4, w) for w in widths)
+    assert sorted(ex.calls) == sorted((4, w) for w in widths)
+    assert all(b.free_rows == b.bank_rows for b in pool.banks)
+    # recorded from the wave/continuous parity run before the wave
+    # scheduler's removal: (sum tiles_served, sum rows_served,
+    # sum busy_cycles) over the pool
+    assert (sum(b.tiles_served for b in pool.banks),
+            sum(b.rows_served for b in pool.banks),
+            sum(b.busy_cycles for b in pool.banks)) == (15, 60, 880)
 
 
 @settings(max_examples=15, deadline=None)
@@ -141,7 +169,9 @@ def test_property_arrival_patterns_match_oracle_and_conserve(seed, pattern,
                                                              n_req):
     """Hypothesis sweep: bursty / trickle / mixed-width arrival streams
     through the session API equal the oracle response-for-response, and
-    bank-cycle accounting matches a legacy engine fed the same chunks."""
+    bank-cycle accounting matches a flushed-batch engine fed the same
+    chunks (conservation: same tiles -> same pool totals regardless of
+    admission times)."""
     rng = np.random.default_rng(seed)
     reqs = make_workload(n_req, min_len=4,
                          max_len=48 if pattern != "mixed" else 160,
@@ -159,22 +189,23 @@ def test_property_arrival_patterns_match_oracle_and_conserve(seed, pattern,
             chunks.append(reqs[prev:c])
             prev = c
     clock = FakeClock()
-    cont = make_engine(True, clock=clock)
-    wave = make_engine(False)
+    cont = make_engine(clock=clock)
+    batch = make_engine()
     session = cont.begin()
     got = []
     for chunk in chunks:
         got += session.feed(chunk, flush=True, now=clock.tick(0.001))
-        wave.submit(chunk)
+        batch.submit(chunk)
     got += session.drain()
     assert len(got) == n_req
     by_id = {r.request_id: r for r in got}
     for req in reqs:
         assert check_against_oracle(req, by_id[req.request_id]), \
             (pattern, req.op, req.n)
-    # conservation of bank-cycle accounting vs the wave engine on the same
-    # chunk boundaries (same tiles -> same totals, different admission times)
-    assert _bank_totals(cont) == _bank_totals(wave)
+    # conservation of bank-cycle accounting vs a flushed-batch engine on the
+    # same chunk boundaries (same tiles -> same totals, whatever the
+    # admission times)
+    assert _bank_totals(cont) == _bank_totals(batch)
     assert all(b.free_rows == b.bank_rows for b in cont.pool.banks)
 
 
@@ -265,7 +296,7 @@ def test_abort_is_owner_scoped():
 # ---------------------------------------------------------------- sessions
 def test_session_size_and_age_closure_with_fake_clock():
     clock = FakeClock()
-    eng = make_engine(True, clock=clock)
+    eng = make_engine(clock=clock)
     s = eng.begin(max_age_s=0.01)
     same = [SortRequest("sort", np.arange(16, dtype=np.uint32) + i)
             for i in range(4)]
@@ -293,7 +324,7 @@ def test_session_results_align_and_latency_is_per_request():
     """Responses are delivered exactly once, and a request's latency spans
     feed -> retire (not the whole stream)."""
     clock = FakeClock()
-    eng = make_engine(True, clock=clock)
+    eng = make_engine(clock=clock)
     s = eng.begin()
     a = SortRequest("sort", np.arange(16, dtype=np.uint32))
     b = SortRequest("topk", np.arange(64, dtype=np.uint32), k=4)
@@ -313,7 +344,7 @@ def test_session_duplicate_ids_rejected_while_in_flight():
     """A request id can only be in flight once (responses are matched by
     id); after it retires the id may be reused — per-request session state
     is pruned at retire so long-lived streams stay O(in-flight)."""
-    eng = make_engine(True)
+    eng = make_engine()
     s = eng.begin()
     req = SortRequest("sort", np.arange(8, dtype=np.uint32))
     assert s.feed([req]) == []                 # bucketed, still in flight
@@ -330,7 +361,7 @@ def test_session_duplicate_ids_rejected_while_in_flight():
 
 
 def test_session_strict_false_isolates_tile_failures():
-    eng = make_engine(True, backends=("numpy",))
+    eng = make_engine(backends=("numpy",))
     s = eng.begin(strict=False)
     good = SortRequest("sort", np.arange(16, dtype=np.uint32))
     eng.policy.by_name["numpy"].run = None            # poison execution
@@ -352,7 +383,7 @@ def test_session_strict_failure_leaves_session_coherent():
     """A strict session's execute failure raises out of feed, but the
     session stays usable: the failed requests leave the in-flight set,
     surface in take_failures(), can be re-fed, and drain() still works."""
-    eng = make_engine(True, backends=("numpy",))
+    eng = make_engine(backends=("numpy",))
     s = eng.begin()                              # strict=True default
     req = SortRequest("sort", np.arange(16, dtype=np.uint32))
     eng.policy.by_name["numpy"].run = None       # poison execution
@@ -370,7 +401,7 @@ def test_session_strict_failure_leaves_session_coherent():
 def test_session_result_cache_commits_incrementally():
     """Streaming hits are served from the memo without touching the
     scheduler, exactly like the batch path."""
-    eng = make_engine(True, cache_size=64)
+    eng = make_engine(cache_size=64)
     s = eng.begin()
     payload = np.arange(32, dtype=np.uint32)[::-1].copy()
     first = s.feed([SortRequest("sort", payload.copy())], flush=True)
@@ -383,23 +414,83 @@ def test_session_result_cache_commits_incrementally():
     assert telem["scheduler"]["tiles"] == 1
 
 
-def test_legacy_flag_keeps_wave_scheduler_and_blocks_streaming():
-    eng = make_engine(False)
-    assert isinstance(eng.scheduler, Scheduler)
-    assert not isinstance(eng.scheduler, ContinuousScheduler)
-    resp = eng.submit([SortRequest("sort", np.arange(16, dtype=np.uint32))])
-    assert len(resp) == 1
-    with pytest.raises(ValueError, match="continuous"):
-        eng.begin()
-    with pytest.raises(ValueError, match="continuous"):
-        AsyncSortServe(eng)
+def test_legacy_wave_scheduler_surface_is_gone():
+    """PR 4 promised the wave path one release of grace; PR 5 removed it.
+    Pin the removal so it cannot silently resurface: no `Scheduler` export,
+    no `continuous=` config knob, no `--legacy_scheduler` CLI flag."""
+    with pytest.raises(ImportError):
+        from repro.sortserve import Scheduler  # noqa: F401
+    with pytest.raises(TypeError):
+        EngineConfig(continuous=False)
+    from repro.launch.sortserve import main
+    with pytest.raises(SystemExit):
+        main(["--legacy_scheduler", "--requests", "1"])
+    # the one scheduler left is the event-clock core
+    assert isinstance(make_engine().scheduler, ContinuousScheduler)
+
+
+def test_session_traffic_class_prewarms_executor_menu():
+    """begin(traffic_class=...) prewarms the class's recorded signature
+    menu: the new session's first tile lands on a warm AOT executor (no
+    compile), and the prewarm count is exported in telemetry."""
+    from repro.sortserve.backends import EXECUTOR_CACHE
+    eng = make_engine(backends=("colskip",))
+    first = eng.begin(traffic_class="narrow-sorts")
+    req = SortRequest("sort", np.arange(16, dtype=np.uint32))
+    got = first.feed([req], flush=True)
+    assert len(got) == 1
+    assert ("sort", 4, 16, None, None) in eng._class_menus["narrow-sorts"]
+    EXECUTOR_CACHE.clear()                      # cold process, warm menu
+    second = eng.begin(traffic_class="narrow-sorts")
+    assert eng.telemetry()["executor_cache"]["prewarmed"] >= 1
+    _, misses_before, _ = EXECUTOR_CACHE.counters()
+    got = second.feed([SortRequest("sort",
+                                   np.arange(16, dtype=np.uint32)[::-1]
+                                   .copy())], flush=True)
+    assert len(got) == 1
+    _, misses_after, _ = EXECUTOR_CACHE.counters()
+    assert misses_after == misses_before        # no compile at first tile
+    assert second.telemetry()["traffic_class"] == "narrow-sorts"
+
+
+def test_traffic_class_keeps_private_cost_priors():
+    """Two classes with opposite measured races route oppositely on the
+    same tile signature — class EMAs never share keys — while an
+    unmeasured class falls back to the global prior (which every class's
+    observations also feed, so unclassified traffic keeps learning)."""
+    from repro.sortserve.backends import CostPolicy, resolve_backends
+    policy = CostPolicy(resolve_backends(("colskip", "jaxsort")),
+                        sim_width_cap=64)
+    for _ in range(5):
+        policy.observe("colskip", "sort", 256, 1, 1e-6,
+                       traffic_class="sim-heavy")
+        policy.observe("jaxsort", "sort", 256, 1, 1e-2,
+                       traffic_class="sim-heavy")
+        policy.observe("colskip", "sort", 256, 1, 1e-2,
+                       traffic_class="xla-heavy")
+        policy.observe("jaxsort", "sort", 256, 1, 1e-6,
+                       traffic_class="xla-heavy")
+    b = Batcher(tile_rows=1, min_bucket=8)
+    b.add(SortRequest("sort", np.arange(256, dtype=np.uint32)))
+    tile = b.flush()[0]
+    assert policy.choose(tile, traffic_class="sim-heavy").name == "colskip"
+    assert policy.choose(tile, traffic_class="xla-heavy").name == "jaxsort"
+    # the class observations also fed the global prior; an unmeasured class
+    # makes the same decision as unclassified traffic (global fallback)
+    assert (policy.choose(tile, traffic_class="fresh").name
+            == policy.choose(tile).name)
+    # and the class EMAs really are separate signatures
+    assert policy.measured_s_per_row("colskip", "sort", 256,
+                                     traffic_class="sim-heavy") < \
+        policy.measured_s_per_row("colskip", "sort", 256,
+                                  traffic_class="xla-heavy")
 
 
 def test_mesh_bank_pool_participates_in_continuous_admission():
     """MeshBankPool + ContinuousScheduler: mesh-backed banks are granted at
     drain events and telemetry stays oracle-exact (§V.C invariance)."""
     pytest.importorskip("jax")
-    eng = make_engine(True, backends=("colskip_mesh", "radix_topk", "numpy"),
+    eng = make_engine(backends=("colskip_mesh", "radix_topk", "numpy"),
                       mesh=True, banks=4, bank_width=64, sim_width_cap=256)
     from repro.dist.bankmesh import MeshBankPool
     assert isinstance(eng.pool, MeshBankPool)
@@ -416,7 +507,7 @@ def test_mesh_bank_pool_participates_in_continuous_admission():
 def test_session_isolate_feed_leaves_open_buckets_alone():
     """isolate=True gives each request a private tile and never force-
     closes other callers' partially filled buckets."""
-    eng = make_engine(True)
+    eng = make_engine()
     s = eng.begin()
     waiting = SortRequest("sort", np.arange(16, dtype=np.uint32))
     assert s.feed([waiting]) == []            # open bucket, 1 of 4 rows
@@ -433,7 +524,7 @@ def test_failed_submit_does_not_orphan_session_batcher_stats():
     """_restore_state rolls stats back in place: a streaming session that
     captured the engine's BatcherStats by reference keeps aggregating into
     engine telemetry after another caller's submit failed and rolled back."""
-    eng = make_engine(True)
+    eng = make_engine()
     session = eng.begin()
     bad = SortRequest("sort", np.arange(16, dtype=np.uint32),
                       backend="numpy")
@@ -453,7 +544,7 @@ def test_async_streams_without_flush_barrier():
     """The async front door feeds the continuous scheduler directly: every
     request is its own arrival (no synthesized micro-batches), and requests
     of different shapes complete independently."""
-    eng = make_engine(True)
+    eng = make_engine()
     server = AsyncSortServe(eng, max_batch=8, max_wait_ms=20.0)
     reqs = make_workload(10, min_len=8, max_len=64, seed=17)
     futures = [server.submit(q) for q in reqs]
@@ -471,7 +562,7 @@ def test_async_fake_clock_age_closure_without_sleeps():
     """clock= threads through the front door: a lone request is released by
     ticking the fake clock past max_wait, never by a real sleep."""
     clock = FakeClock()
-    eng = make_engine(True, clock=clock)
+    eng = make_engine(clock=clock)
     server = AsyncSortServe(eng, max_batch=4, max_wait_ms=50.0, clock=clock)
     req = SortRequest("sort", np.arange(24, dtype=np.uint32))
     fut = server.submit(req)
@@ -484,7 +575,7 @@ def test_async_fake_clock_age_closure_without_sleeps():
 def test_async_duplicate_in_flight_id_fails_newcomer_not_original():
     """A second in-flight request with the same id fails its own future;
     the original's future still resolves (it is never orphaned)."""
-    eng = make_engine(True)
+    eng = make_engine()
     server = AsyncSortServe(eng, max_batch=4, max_wait_ms=20.0)
     first = SortRequest("sort", np.arange(16, dtype=np.uint32))
     dup = SortRequest("sort", np.arange(16, dtype=np.uint32)[::-1].copy(),
@@ -499,7 +590,7 @@ def test_async_duplicate_in_flight_id_fails_newcomer_not_original():
 def test_async_retry_isolates_offender_from_co_bucketed_neighbour():
     """Two same-shape requests share a tile; the tile fails; the retry path
     re-feeds each alone so only the true offender's future errors."""
-    eng = make_engine(True, backends=("numpy",), tile_rows=2)
+    eng = make_engine(backends=("numpy",), tile_rows=2)
     server = AsyncSortServe(eng, max_batch=4, max_wait_ms=30.0)
     orig_run = type(eng.policy.by_name["numpy"]).run
 

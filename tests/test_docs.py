@@ -1,0 +1,98 @@
+"""Docs stay true: telemetry reference ≡ live keys, no stale links.
+
+Two contracts:
+
+  * ``docs/telemetry.md``'s key tables (first-column code spans) must match
+    the flattened key set of a live engine's + session's ``telemetry()``
+    output exactly — a new counter must be documented, a removed one
+    un-documented;
+  * ``scripts/check_docs.py`` (the CI link/anchor/path checker) must pass
+    against the working tree.
+"""
+
+import pathlib
+import re
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.sortserve import (
+    EngineConfig,
+    SortRequest,
+    SortServeEngine,
+    WatermarkPolicy,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+TELEMETRY_MD = ROOT / "docs" / "telemetry.md"
+
+
+def flatten_keys(obj, prefix="") -> set[str]:
+    """Dotted leaf paths; data-dependent dict keys collapse to wildcards
+    and homogeneous lists to ``[]`` — the documentation's spelling."""
+    keys: set[str] = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            name = k
+            if prefix == "per_backend.":
+                name = "<backend>"
+            elif prefix == "modeled_hw_throughput_num_per_s.":
+                name = "<width>"
+            keys |= flatten_keys(v, f"{prefix}{name}.")
+    elif isinstance(obj, list):
+        for v in obj:
+            keys |= flatten_keys(v, f"{prefix}[].")
+        if not obj:
+            keys.add(prefix[:-1] + ".[]")
+    else:
+        keys.add(prefix[:-1])
+    return keys
+
+
+def documented_keys() -> set[str]:
+    """First-column code spans of every table row in docs/telemetry.md."""
+    keys = set()
+    for line in TELEMETRY_MD.read_text().splitlines():
+        m = re.match(r"\|\s*`([^`]+)`\s*\|", line)
+        if m:
+            keys.add(m.group(1))
+    return keys
+
+
+def live_keys() -> set[str]:
+    """Engine + session key set from a live serve covering every section
+    (multiple backends, a traffic class, an admission policy)."""
+    eng = SortServeEngine(EngineConfig(
+        backends=("colskip", "radix_topk", "jaxsort", "numpy"),
+        tile_rows=2, banks=2, bank_width=64, bank_rows=2, sim_width_cap=64,
+        admission=WatermarkPolicy(high_watermark=8)))
+    s = eng.begin(traffic_class="docs")
+    reqs = [SortRequest("sort", np.arange(16, dtype=np.uint32) + i)
+            for i in range(4)]
+    reqs += [SortRequest("topk", np.arange(32, dtype=np.uint32) + i, k=2)
+             for i in range(2)]
+    reqs += [SortRequest("sort", np.arange(128, dtype=np.uint32))]
+    s.feed(reqs, flush=True)
+    s.drain()
+    return (flatten_keys(eng.telemetry())
+            | {f"session.{k}" for k in flatten_keys(s.telemetry())})
+
+
+def test_telemetry_doc_matches_live_key_set():
+    doc, live = documented_keys(), live_keys()
+    undocumented = live - doc
+    stale = doc - live
+    assert not undocumented, \
+        f"telemetry keys missing from docs/telemetry.md: {sorted(undocumented)}"
+    assert not stale, \
+        f"docs/telemetry.md documents keys the engine no longer emits: " \
+        f"{sorted(stale)}"
+
+
+def test_docs_link_checker_passes_on_tree():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, \
+        f"stale docs references:\n{proc.stdout}{proc.stderr}"

@@ -1,0 +1,298 @@
+"""Overload control: admission watermarks, shedding, bounded front door.
+
+The PR-5 acceptance surface (ISSUE 5):
+
+  * with shedding **disabled** (defer watermarks) no result is ever lost —
+    every fed tile retires, however hard the trace overloads the pool;
+  * with shedding **enabled**, shed requests error deterministically with
+    :class:`ShedError` (never a silent drop), and served + shed accounts
+    for every arrival;
+  * ``high_watermark_crossings`` is monotone in offered load (extending a
+    trace can only add crossings — the prefix simulation is identical);
+  * the engine/session surface: a shed request raises out of a strict
+    ``submit`` after full telemetry rollback, surfaces via
+    ``take_failures`` on a ``strict=False`` session, and resolves the async
+    front door's future with :class:`RetryAfter`; ``max_inflight`` bounds
+    accepted futures the same way.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.sortserve import (
+    BankPool,
+    ContinuousScheduler,
+    EngineConfig,
+    RetryAfter,
+    ShedError,
+    SortRequest,
+    SortServeEngine,
+    WatermarkPolicy,
+)
+from repro.sortserve.batcher import Tile
+
+
+def _tile(width: int, rows: int = 4) -> Tile:
+    return Tile(op="sort", data=np.zeros((rows, width), np.uint32), k=None,
+                entries=[], pad_rows=rows)
+
+
+class CountingExec:
+    def __init__(self, cycles: int = 100):
+        self.calls = 0
+        self.cycles = cycles
+
+    def __call__(self, tile):
+        self.calls += 1
+        return type("R", (), {"cycles": np.full(tile.shape[0],
+                                                self.cycles)})()
+
+
+def _overload_trace(n: int, gap: float = 10.0, width: int = 64):
+    """n arrivals far faster than the pool drains (service=400 vt/tile)."""
+    return [(i * gap, width) for i in range(n)]
+
+
+def _serve(trace, policy, banks: int = 2):
+    """Run a trace through a watermarked scheduler; returns (scheduler,
+    served tile count, shed exceptions)."""
+    pool = BankPool(banks=banks, bank_width=64, bank_rows=4)
+    sched = ContinuousScheduler(pool, policy=policy)
+    served, shed = [], []
+
+    def sink(tile, result, exc):
+        (shed if exc is not None else served).append((tile, exc))
+
+    ex = CountingExec()
+    for t, w in trace:
+        sched.feed([_tile(w)], ex, sink=sink, at=t, strict=False)
+    sched.pump()
+    return sched, served, shed
+
+
+# ------------------------------------------------------------- scheduler
+def test_defer_watermarks_lose_nothing():
+    """Shedding disabled: every arrival eventually retires (deferred
+    arrivals re-enter at their retry time and the deadline forces
+    acceptance), and the admission queue stays bounded by the watermark."""
+    policy = WatermarkPolicy(high_watermark=4, retry_after_vt=500.0,
+                             deadline_vt=1e9)
+    sched, served, shed = _serve(_overload_trace(40), policy)
+    assert len(served) == 40 and not shed
+    assert sched.stats.deferred > 0
+    assert sched.stats.shed == 0
+    assert sched.stats.queued_peak <= 4
+    assert policy.crossings >= 1
+    t = sched.telemetry()["continuous"]
+    assert t["queue_depth"] == 0 and t["deferred"] == sched.stats.deferred
+    assert all(b.free_rows == b.bank_rows for b in sched.pool.banks)
+
+
+def test_shed_watermarks_error_deterministically():
+    """Shedding enabled: served + shed == arrivals, every shed carries a
+    ShedError with the policy's back-off hint, and re-running the identical
+    trace sheds the identical arrivals (determinism)."""
+    def run():
+        policy = WatermarkPolicy(high_watermark=4, shed=True,
+                                 retry_after_vt=750.0)
+        return _serve(_overload_trace(40), policy)
+
+    sched, served, shed = run()
+    assert len(served) + len(shed) == 40
+    assert len(shed) == sched.stats.shed > 0
+    for _, exc in shed:
+        assert isinstance(exc, ShedError)
+        assert exc.retry_after_vt == 750.0
+    assert sched.stats.queued_peak <= 4
+    sched2, served2, shed2 = run()
+    assert len(served2) == len(served) and len(shed2) == len(shed)
+    assert sched2.stats.shed == sched.stats.shed
+
+
+def test_strict_shed_raises_out_of_pump():
+    policy = WatermarkPolicy(high_watermark=1, shed=True)
+    pool = BankPool(banks=1, bank_width=64, bank_rows=4)
+    sched = ContinuousScheduler(pool, policy=policy)
+    ex = CountingExec()
+    for t in (0.0, 1.0, 2.0, 3.0):
+        sched.feed([_tile(64)], ex, at=t)          # strict=True default
+    with pytest.raises(ShedError):
+        sched.pump()
+
+
+def test_watermark_policy_validates_bounds():
+    with pytest.raises(ValueError, match="high_watermark"):
+        WatermarkPolicy(high_watermark=0)
+    with pytest.raises(ValueError, match="low_watermark"):
+        WatermarkPolicy(high_watermark=4, low_watermark=4)
+    with pytest.raises(ValueError, match="occupancy_high"):
+        WatermarkPolicy(high_watermark=4, occupancy_high=1.5)
+
+
+def test_occupancy_watermark_triggers_with_any_queue():
+    """The occupancy gate engages as soon as the pool is saturated AND a
+    queue exists (depth > 0) — it does not wait for the depth watermark."""
+    policy = WatermarkPolicy(high_watermark=100, occupancy_high=1.0,
+                             shed=True)
+    sched, served, shed = _serve(
+        [(float(t), 64) for t in range(4)], policy)
+    # 2 banks: arrivals 1-2 admit, arrival 3 queues (occupied, depth 0),
+    # arrival 4 sheds (occupancy 1.0 with a queue)
+    assert len(served) == 3 and len(shed) == 1
+    assert policy.crossings == 1
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(5, 60),
+       shed=st.booleans(), high=st.integers(2, 8))
+def test_property_no_arrival_unaccounted(seed, n, shed, high):
+    """Hypothesis sweep: under any random overload trace, every arrival is
+    accounted for — retired, or shed with a ShedError — and with shedding
+    off nothing is lost at all."""
+    rng = np.random.default_rng(seed)
+    t, trace = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(60.0))
+        trace.append((t, int(rng.choice((64, 128)))))
+    policy = WatermarkPolicy(high_watermark=high, shed=shed,
+                             retry_after_vt=300.0, deadline_vt=1e9)
+    sched, served, shed_out = _serve(trace, policy)
+    assert len(served) + len(shed_out) == n
+    if not shed:
+        assert not shed_out                      # nothing lost, ever
+    assert all(isinstance(exc, ShedError) for _, exc in shed_out)
+    assert sched.stats.queued_peak <= high
+    assert all(b.free_rows == b.bank_rows for b in sched.pool.banks)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), base=st.integers(6, 24),
+       extra=st.integers(1, 24))
+def test_property_watermark_crossings_monotone_in_offered_load(seed, base,
+                                                               extra):
+    """Extending a trace with more arrivals (strictly later than the
+    prefix) never decreases high_watermark_crossings: the prefix simulation
+    is identical event-for-event, so added load only adds crossings."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(40.0, size=base + extra)
+    times = np.cumsum(gaps)
+    trace_full = [(float(t), 64) for t in times]
+
+    def crossings(trace):
+        policy = WatermarkPolicy(high_watermark=3, shed=True)
+        _serve(trace, policy)
+        return policy.crossings
+
+    assert crossings(trace_full) >= crossings(trace_full[:base])
+
+
+# ------------------------------------------------------ engine + sessions
+def small_engine(**over):
+    cfg = dict(backends=("numpy",), tile_rows=2, min_bucket=8, banks=2,
+               bank_width=64, bank_rows=2, sim_width_cap=128, cache_size=0,
+               adaptive_policy=False)
+    cfg.update(over)
+    return SortServeEngine(EngineConfig(**cfg))
+
+
+def _reqs(n, width=16):
+    return [SortRequest("sort", np.arange(width, dtype=np.uint32) + i)
+            for i in range(n)]
+
+
+def test_session_surfaces_shed_via_take_failures():
+    """strict=False sessions: shed requests leave the stream with a
+    ShedError in take_failures (re-feedable once load drops), counted in
+    the session's `shed` stat, never silently dropped."""
+    eng = small_engine(admission=WatermarkPolicy(high_watermark=1,
+                                                 shed=True))
+    s = eng.begin(strict=False)
+    got = s.feed(_reqs(12), flush=True) + s.drain()
+    failures = s.take_failures()
+    assert failures and all(isinstance(exc, ShedError)
+                            for _, exc, _ in failures)
+    assert len(got) + len(failures) == 12
+    telem = s.telemetry()
+    assert telem["shed"] == len(failures)
+    assert telem["scheduler_delta"]["shed"] > 0
+    assert s._outstanding == set()               # shed requests pruned
+    # load dropped: the shed requests can be re-fed and now serve
+    refed = [req for req, _, _ in failures[:2]]
+    again = s.feed(refed, flush=True) + s.drain()
+    assert {r.request_id for r in again} == {q.request_id for q in refed}
+
+
+def test_strict_submit_shed_raises_and_rolls_back():
+    eng = small_engine(admission=WatermarkPolicy(high_watermark=1,
+                                                 shed=True))
+    before = eng.telemetry()
+    with pytest.raises(ShedError):
+        eng.submit(_reqs(12))
+    after = eng.telemetry()
+    before.pop("executor_cache"), after.pop("executor_cache")
+    assert after == before                       # full telemetry rollback
+    # a batch small enough to stay under the watermark still serves
+    assert len(eng.submit(_reqs(2))) == 2
+
+
+def test_async_inflight_bound_fails_fast_with_retry_after():
+    """Submits past max_inflight fail immediately with RetryAfter (the
+    bounded inflight semaphore): the two accepted requests sit in an open
+    bucket (tile_rows=4, long max_wait), so every later submit is over the
+    cap deterministically; close() then serves the accepted ones."""
+    from repro.sortserve import AsyncSortServe
+    eng = small_engine(tile_rows=4, bank_rows=4)
+    server = AsyncSortServe(eng, max_batch=4, max_wait_ms=10_000.0,
+                            max_inflight=2)
+    accepted = [server.submit(q) for q in _reqs(2)]
+    # neither can resolve (bucket 2 of 4 rows, 10s age) and the inflight
+    # count is taken synchronously at submit: the cap is held
+    rejected = [server.submit(q) for q in _reqs(6, width=32)]
+    assert all(f.done() and isinstance(f.exception(), RetryAfter)
+               for f in rejected)
+    assert server.rejected == 6
+    assert all(f.exception().retry_after_s > 0 for f in rejected)
+    server.close()                               # flushes the open bucket
+    for f in accepted:
+        assert f.result(timeout=60) is not None
+    # slots recycle once futures resolve: a bound-1 server serves twice
+    server2 = AsyncSortServe(small_engine(), max_inflight=1)
+    fut = server2.submit(_reqs(1)[0])
+    assert fut.result(timeout=60) is not None
+    fut2 = server2.submit(_reqs(1)[0])
+    assert fut2.result(timeout=60) is not None   # slot freed after retire
+    server2.close()
+
+
+def test_async_maps_admission_shed_onto_retry_after_future():
+    """A request shed by the engine's admission policy resolves its future
+    with RetryAfter (cause: the ShedError) — deterministic caller-visible
+    backpressure, no isolation retry.  Four distinct-width requests stay in
+    open buckets until close() flushes them as one four-tile dispatch; with
+    2 banks and high_watermark=1 exactly one tile is shed."""
+    from repro.sortserve import AsyncSortServe
+    eng = small_engine(admission=WatermarkPolicy(high_watermark=1,
+                                                 shed=True,
+                                                 retry_after_vt=100.0))
+    server = AsyncSortServe(eng, max_batch=16, max_wait_ms=10_000.0)
+    reqs = [SortRequest("sort", np.arange(w, dtype=np.uint32))
+            for w in (8, 16, 32, 64)]            # four buckets, none closes
+    futures = [server.submit(q) for q in reqs]
+    server.close()                               # one 4-tile dispatch
+    outcomes = []
+    for f in futures:
+        try:
+            outcomes.append(("ok", f.result(timeout=60)))
+        except RetryAfter as exc:
+            assert isinstance(exc.__cause__, ShedError)
+            outcomes.append(("shed", exc))
+    assert [k for k, _ in outcomes].count("shed") == 1
+    assert eng.telemetry()["scheduler"]["continuous"]["shed"] == 1
+
+
+def test_async_rejects_bad_max_inflight():
+    from repro.sortserve import AsyncSortServe
+    with pytest.raises(ValueError, match="max_inflight"):
+        AsyncSortServe(small_engine(), max_inflight=0)

@@ -11,8 +11,8 @@ from repro.sortserve import (
     AsyncSortServe,
     BankPool,
     Batcher,
+    ContinuousScheduler,
     EngineConfig,
-    Scheduler,
     SortRequest,
     SortServeEngine,
     encode_payload,
@@ -109,7 +109,7 @@ class _CountingExec:
 
 def test_scheduler_occupancy_drain_and_bank_telemetry():
     pool = BankPool(banks=2, bank_width=64, bank_rows=4)
-    sched = Scheduler(pool)
+    sched = ContinuousScheduler(pool)
     b = Batcher(tile_rows=4, min_bucket=8)
     for _ in range(8):                      # two (4, 128) tiles, 2 shards each
         b.add(SortRequest("sort", np.arange(100, dtype=np.uint32)))
@@ -134,18 +134,18 @@ def test_scheduler_capacity_misuse_raises_value_error():
     b = Batcher(tile_rows=4, min_bucket=8)
     b.add(SortRequest("sort", np.arange(16, dtype=np.uint32)))
     with pytest.raises(ValueError, match="bank_rows"):
-        Scheduler(pool).run(b.flush(), _CountingExec())
+        ContinuousScheduler(pool).run(b.flush(), _CountingExec())
     # same contract on the oversized (wave) path: width forces 8 shards > 2
     pool2 = BankPool(banks=2, bank_width=32, bank_rows=2)
     b2 = Batcher(tile_rows=4, min_bucket=8)
     b2.add(SortRequest("sort", np.arange(256, dtype=np.uint32)))
     with pytest.raises(ValueError, match="bank_rows"):
-        Scheduler(pool2).run(b2.flush(), _CountingExec())
+        ContinuousScheduler(pool2).run(b2.flush(), _CountingExec())
 
 
 def test_scheduler_oversized_tile_runs_in_waves():
     pool = BankPool(banks=2, bank_width=32, bank_rows=4)
-    sched = Scheduler(pool)
+    sched = ContinuousScheduler(pool)
     b = Batcher(tile_rows=4, min_bucket=8)
     b.add(SortRequest("sort", np.arange(256, dtype=np.uint32)))  # 8 shards > 2
     tiles = b.flush()
@@ -169,7 +169,7 @@ def test_scheduler_mid_wave_admission_on_partial_final_wave():
     """A queued tile is admitted the moment the final partial wave frees
     banks, instead of waiting for the oversized tile to fully retire."""
     pool = BankPool(banks=3, bank_width=32, bank_rows=4)
-    sched = Scheduler(pool)
+    sched = ContinuousScheduler(pool)
     # 128 cols -> 4 shards over 3 banks -> 2 waves, final wave needs 1 bank:
     # banks 1 and 2 idle through the last wave and admit the queued tile
     big, small = _raw_tile(128), _raw_tile(32)
@@ -189,7 +189,7 @@ def test_scheduler_mid_wave_admission_on_partial_final_wave():
 def test_scheduler_mid_wave_backfills_pending_queue():
     """Pending tiles (not just the held one) backfill early-freed banks."""
     pool = BankPool(banks=3, bank_width=32, bank_rows=4)
-    sched = Scheduler(pool)
+    sched = ContinuousScheduler(pool)
     tiles = [_raw_tile(128), _raw_tile(32), _raw_tile(32)]
     results = sched.run(tiles, _CountingExec())
     assert len(results) == 3
