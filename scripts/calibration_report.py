@@ -1,0 +1,75 @@
+"""Render the measured-vs-modeled calibration table from telemetry.
+
+    PYTHONPATH=src python scripts/calibration_report.py telemetry.json
+    PYTHONPATH=src python scripts/calibration_report.py --live [--requests N]
+
+Reads the ``calibration`` section of a dumped telemetry JSON
+(``engine.dump_telemetry(path)`` / ``launch.sortserve --json``), or with
+``--live`` serves a two-round workload in-process (cold round compiles,
+warm round populates the table) and reports per-(backend, width) ratios:
+``ratio = measured wall_s / modeled cycles at the 500 MHz part``.  Ratios
+far above 1 are expected for software simulation of the modeled hardware;
+a *drifting* ratio means the §V cost model no longer describes the machine
+it routes for.  See docs/observability.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def render(calibration: dict) -> int:
+    if not calibration:
+        print("calibration table is empty — no warm execution with modeled "
+              "cycles was recorded (run more than one round, or check that "
+              "a cycle-modeling backend like colskip/jaxsort is enabled)")
+        return 1
+    print(f"{'backend':<14} {'width':>7} {'tiles':>6} {'wall_s':>11} "
+          f"{'modeled_s':>11} {'ratio':>10}")
+    for backend in sorted(calibration):
+        for width, cell in sorted(calibration[backend].items(),
+                                  key=lambda kv: int(kv[0])):
+            print(f"{backend:<14} {width:>7} {cell['tiles']:>6} "
+                  f"{cell['wall_s']:>11.4f} {cell['modeled_s']:>11.6f} "
+                  f"{cell['ratio']:>10.1f}")
+    return 0
+
+
+def live_table(requests: int, seed: int) -> dict:
+    from repro.launch.sortserve import make_workload
+    from repro.sortserve import EngineConfig, SortServeEngine
+
+    engine = SortServeEngine(EngineConfig(cache_size=0))
+    for rnd in range(2):            # round 2 runs warm -> calibration rows
+        engine.submit(make_workload(requests, min_len=16, max_len=512,
+                                    seed=seed + rnd))
+    return engine.telemetry()["calibration"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("telemetry", nargs="?",
+                    help="telemetry JSON from engine.dump_telemetry / "
+                         "launch.sortserve --json")
+    ap.add_argument("--live", action="store_true",
+                    help="serve a two-round workload in-process instead of "
+                         "reading a file")
+    ap.add_argument("--requests", type=int, default=40,
+                    help="requests per round with --live")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.live:
+        calib = live_table(args.requests, args.seed)
+    elif args.telemetry:
+        with open(args.telemetry) as f:
+            calib = json.load(f).get("calibration", {})
+    else:
+        ap.error("give a telemetry JSON path or --live")
+    return render(calib)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -184,3 +184,11 @@ class MeshBankPool(BankPool):
     @property
     def n_devices(self) -> int:
         return self.mesh.shape[self.axis_name]
+
+    def bank_labels(self) -> list[str]:
+        """Trace-export track names carrying the device each logical bank
+        maps onto (banks cycle over the mesh axis when the pool models more
+        banks than there are devices)."""
+        devs = list(self.mesh.devices.flat)
+        return [f"bank {b.index} @ {devs[b.index % len(devs)]}"
+                for b in self.banks]

@@ -102,6 +102,9 @@ def main(argv=None):
                     help="shed (deterministically reject) arrivals over the "
                          "watermark instead of deferring them")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
+    ap.add_argument("--trace", default="",
+                    help="enable the flight recorder and write the Chrome "
+                         "trace-event JSON here (view at ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     backends = tuple(s for s in args.backends.split(",") if s)
@@ -122,8 +125,13 @@ def main(argv=None):
         admission = WatermarkPolicy(high_watermark=args.high_watermark,
                                     low_watermark=args.low_watermark,
                                     shed=args.shed_overload)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     as_flag = {"auto": None, "on": True, "off": False}
     cfg = EngineConfig(
+        tracer=tracer,
         backends=backends,
         tile_rows=args.tile_rows,
         banks=args.banks,
@@ -190,6 +198,10 @@ def main(argv=None):
                   f"{cont['shed']} shed  "
                   f"{cont['high_watermark_crossings']} watermark crossings  "
                   f"queued peak {cont['queued_peak']}")
+    if args.trace:
+        doc = engine.dump_trace(args.trace)
+        print(f"trace: {len(doc['traceEvents'])} events "
+              f"({tracer.span_count()} request chains) -> {args.trace}")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

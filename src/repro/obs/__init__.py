@@ -1,0 +1,21 @@
+"""Flight-recorder observability: span tracing, windowed metrics,
+measured-vs-modeled calibration.
+
+Everything here is engine-facing and clock-explicit: the engine injects
+its own clock readings into every hook, so all of it is deterministic
+under a fake clock and adds nothing to the serving path when unused.
+"""
+
+from repro.obs.calibration import CalibrationTable
+from repro.obs.metrics import (Gauge, LogBucketHistogram, MetricsRegistry,
+                               WindowedCounter)
+from repro.obs.tracer import Tracer
+
+__all__ = [
+    "CalibrationTable",
+    "Gauge",
+    "LogBucketHistogram",
+    "MetricsRegistry",
+    "Tracer",
+    "WindowedCounter",
+]

@@ -174,6 +174,18 @@ class TileResult:
     estimated_cycles: float | None = None   # cost-model estimate when not exact
     meta: dict = field(default_factory=dict)
 
+    def modeled_cycles(self) -> float | None:
+        """The tile's total modeled-cycle count in the §V domain: the exact
+        per-row cycle telemetry summed when the backend simulates it, the
+        cost-model estimate otherwise, None when neither exists (numpy
+        oracle, radix plane reads) — the denominator of the engine's
+        measured-vs-modeled calibration ratio."""
+        if self.cycles is not None:
+            return float(int(self.cycles.sum()))
+        if self.estimated_cycles is not None:
+            return float(self.estimated_cycles)
+        return None
+
 
 def solve_numpy(op: str, u: np.ndarray, k: int | None) -> tuple[np.ndarray, np.ndarray]:
     """Reference answer for one encoded row: (values_u32, indices).

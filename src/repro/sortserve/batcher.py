@@ -62,6 +62,7 @@ class Tile:
     entries: list[tuple[SortRequest, int]]  # (request, row) — row < len(entries)
     pad_rows: int                          # sentinel-only rows at the bottom
     hint: str | None = None                # routing hint shared by all entries
+    obs: dict = field(default_factory=dict)  # observability tags (trace seq)
 
     @property
     def shape(self) -> tuple[int, int]:

@@ -77,6 +77,8 @@ from .backends import (
 from .batcher import Batcher, Tile
 from .request import SortRequest, SortResponse, decode_values
 from .scheduler import BankPool, ContinuousScheduler, ShedError
+from repro.obs.calibration import CalibrationTable
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["AsyncSortServe", "EngineConfig", "RetryAfter", "SortServeEngine",
            "SortSession"]
@@ -116,6 +118,11 @@ class EngineConfig:
     adaptive_policy: bool = True    # measured-EMA routing over the cap prior
     admission: object | None = None  # AdmissionPolicy (e.g. WatermarkPolicy)
                                      # gating arrivals; None accepts all
+    tracer: object | None = None     # repro.obs.Tracer: per-request span
+                                     # chains + scheduler events; None (the
+                                     # default) keeps the serving path
+                                     # recorder-free
+    metrics_window_s: float = 60.0   # sliding window behind telemetry "window"
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -170,10 +177,18 @@ class SortServeEngine:
                                  w=self.config.w,
                                  adaptive=self.config.adaptive_policy)
         self.batcher = Batcher(self.config.tile_rows, self.config.min_bucket)
+        # flight recorder (opt-in) + always-on windowed metrics/calibration;
+        # the tracer doubles as the scheduler's event hook so ARRIVE/ADMIT/
+        # DEFER/SHED/EARLY/RETIRE land in the same stream as request spans
+        self._tracer = self.config.tracer
+        self._metrics = MetricsRegistry(self.config.metrics_window_s)
+        self._calib = CalibrationTable()
         # one persistent event-clock scheduler for the engine's lifetime;
         # the admission policy (if any) gates arrivals under overload
-        self.scheduler = ContinuousScheduler(self.pool,
-                                             policy=self.config.admission)
+        self.scheduler = ContinuousScheduler(
+            self.pool, policy=self.config.admission,
+            on_event=(self._tracer.sched_event
+                      if self._tracer is not None else None))
         # serializes sessions/submits over the shared scheduler + telemetry
         # (the async front door feeds from its collector thread)
         self._lock = threading.RLock()
@@ -259,6 +274,8 @@ class SortServeEngine:
                    for b in self.pool.banks],
             cache=self._cache.copy(),
             lat=(list(self._latencies), self._lat_sum, self._lat_count),
+            metrics=self._metrics.snapshot(),
+            calib=self._calib.snapshot(),
             # admission-policy state (watermark hysteresis, crossing count)
             # is telemetry-visible, so it rolls back with everything else
             policy=(None if self.scheduler.policy is None
@@ -282,6 +299,11 @@ class SortServeEngine:
         lat, lat_sum, lat_count = snap["lat"]
         self._latencies = deque(lat, maxlen=self._latencies.maxlen)
         self._lat_sum, self._lat_count = lat_sum, lat_count
+        # the tracer is deliberately NOT restored: flight-recorder semantics
+        # — what the recorder saw, it keeps (aborted chains are finalized as
+        # such in submit's except path)
+        self._metrics.restore(snap["metrics"])
+        self._calib.restore(snap["calib"])
         if snap["policy"] is not None:
             # clear first: attributes the failed batch *created* (e.g. a
             # lazily-initialized counter) must not survive the rollback
@@ -345,6 +367,8 @@ class SortServeEngine:
                 got += session.drain()
             except BaseException:
                 self.scheduler.abort(session)
+                if self._tracer is not None:
+                    self._tracer.drop(session._outstanding, self._clock())
                 self._restore_state(snap)
                 raise
             by_id = {resp.request_id: resp for resp in got}
@@ -355,7 +379,8 @@ class SortServeEngine:
         backend = self.policy.choose(tile, traffic_class=traffic_class)
         t0 = self._clock()
         result = backend.run(tile)
-        result.meta["wall_s"] = self._clock() - t0
+        t1 = self._clock()
+        result.meta["wall_s"] = t1 - t0
         warm = result.meta.get("exec_warm")     # None: backend has no cache
         if warm is not None:
             self._exec_stats["hits" if warm else "misses"] += 1
@@ -369,6 +394,22 @@ class SortServeEngine:
             self.policy.observe(backend.name, tile.op, tile.shape[1],
                                 tile.shape[0], result.meta["wall_s"],
                                 k=tile.k, traffic_class=traffic_class)
+        # measured-vs-modeled calibration probe: wall seconds against the §V
+        # cycle domain.  Same warm-only gate as the routing EMA — a cold
+        # run's wall is compile cost, not execution cost — and backends with
+        # no modeled cycles (numpy oracle, radix plane reads) have no ratio.
+        cycles_total = (int(result.cycles.sum())
+                        if result.cycles is not None else None)
+        modeled = result.modeled_cycles() or 0.0
+        if warm is not False and modeled > 0:
+            self._calib.record(backend.name, tile.shape[1],
+                               result.meta["wall_s"], modeled)
+        self._metrics.tile_executed(
+            t1, occupancy=(sum(1 for b in self.pool.banks if b.loaded)
+                           / len(self.pool.banks)))
+        if self._tracer is not None:
+            self._tracer.tile_executed(tile, backend.name, warm, t0, t1,
+                                       cycles_total, result.estimated_cycles)
         pb = self._agg["per_backend"].setdefault(
             backend.name, {"tiles": 0, "requests": 0, "rows": 0,
                            "column_reads": 0, "wall_s": 0.0})
@@ -440,9 +481,14 @@ class SortServeEngine:
                               self._agg["cache_misses"]))
         return {
             "requests": self._agg["requests"],
-            "latency_s": {          # mean is all-time; quantiles are windowed
+            "latency_s": {
+                # both means, under distinct keys: "mean" is the all-time
+                # running mean (running totals, unbounded history), while
+                # "mean_windowed" averages the same bounded 4096-request
+                # window the p50/p95/max quantiles are computed from
                 "mean": (self._lat_sum / self._lat_count
                          if self._lat_count else 0.0),
+                "mean_windowed": float(lat.mean()),
                 "p50": float(np.percentile(lat, 50)),
                 "p95": float(np.percentile(lat, 95)),
                 "max": float(lat.max()),
@@ -476,6 +522,11 @@ class SortServeEngine:
             },
             "scheduler": self.scheduler.telemetry(),
             "modeled_hw_throughput_num_per_s": dict(self._agg["modeled_hw"]),
+            # sliding-window live signals (the fleet router's placement
+            # input) and the per-(backend, width) measured-vs-modeled table
+            "window": self._metrics.window(self._clock(),
+                                           self.scheduler.queue_depth()),
+            "calibration": self._calib.table(),
         }
 
     def dump_telemetry(self, path: str) -> dict:
@@ -483,6 +534,19 @@ class SortServeEngine:
         with open(path, "w") as f:
             json.dump(telem, f, indent=2, sort_keys=True)
         return telem
+
+    def dump_trace(self, path: str) -> dict:
+        """Export the flight recorder as Chrome trace-event JSON (viewable
+        at https://ui.perfetto.dev): the wall-clock request spans and the
+        virtual-time bank/scheduler tracks of
+        :meth:`repro.obs.Tracer.export`."""
+        if self._tracer is None:
+            raise RuntimeError(
+                "no tracer configured; build the engine with "
+                "EngineConfig(tracer=repro.obs.Tracer())")
+        with self._lock:
+            return self._tracer.dump(path,
+                                     bank_labels=self.pool.bank_labels())
 
 
 class SortSession:
@@ -553,6 +617,7 @@ class SortSession:
             now = e._clock() if now is None else now
             e._validate_batch(requests, prior_ids=self._outstanding)
             use_cache = e.config.cache_size > 0
+            tracer = e._tracer
             solo: list[SortRequest] = []
             for req in requests:
                 rid = req.request_id
@@ -563,9 +628,12 @@ class SortSession:
                     e._cache.move_to_end(key)
                     e._agg["cache_hits"] += 1
                     self._stats["cache_hits"] += 1
+                    if tracer is not None:
+                        tracer.request_cache_hit(rid, req.op, req.n,
+                                                 self.traffic_class, now)
                     self._record(e._isolated_response(
                         entry, request_id=rid, latency_s=0.0,
-                        meta={**entry.meta, "cache_hit": True}), 0.0)
+                        meta={**entry.meta, "cache_hit": True}), 0.0, now)
                     continue
                 if use_cache:
                     e._agg["cache_misses"] += 1
@@ -574,6 +642,9 @@ class SortSession:
                                   self._batcher.signature_of(req))
                 self._t_fed[rid] = now
                 self._outstanding.add(rid)
+                if tracer is not None:
+                    tracer.request_feed(rid, req.op, req.n,
+                                        self.traffic_class, now)
                 if isolate:
                     solo.append(req)
                 else:
@@ -629,6 +700,13 @@ class SortSession:
         e = self.engine
         if tiles:
             self._stats["tiles"] += len(tiles)
+            tracer = e._tracer
+            if tracer is not None:
+                now = e._clock()
+                for tile in tiles:
+                    rec = tracer.tile_dispatched(tile, now)
+                    for req, _ in tile.entries:
+                        tracer.request_dispatched(req.request_id, rec, now)
             e.scheduler.feed(
                 tiles,
                 lambda tile: e._execute(tile,
@@ -639,6 +717,8 @@ class SortSession:
     def _on_tile(self, tile: Tile, result, exc) -> None:
         e = self.engine
         if exc is not None:
+            now = e._clock()
+            shed = isinstance(exc, ShedError)
             for req, _ in tile.entries:
                 # a failed (or shed) request leaves the stream entirely —
                 # the front door may legitimately re-feed it (isolation
@@ -646,12 +726,16 @@ class SortSession:
                 self._outstanding.discard(req.request_id)
                 self._t_fed.pop(req.request_id, None)
                 self._keys.pop(req.request_id, None)
-                self._stats["shed" if isinstance(exc, ShedError)
-                            else "failed"] += 1
+                self._stats["shed" if shed else "failed"] += 1
                 self._failures.append((req, exc, len(tile.entries)))
+                e._metrics.request_rejected(now, shed=shed)
+                if e._tracer is not None:
+                    e._tracer.request_failed(req.request_id, now,
+                                             "shed" if shed else "failed")
             return
         now = e._clock()
         use_cache = e.config.cache_size > 0
+        tracer = e._tracer
         for resp in e._scatter(
                 tile, result,
                 lambda req: now - self._t_fed[req.request_id]):
@@ -661,7 +745,9 @@ class SortSession:
                 key = self._keys.pop(rid, None)
                 if key is not None:
                     e._cache[key] = e._isolated_response(resp)
-            self._record(resp, resp.latency_s)
+            if tracer is not None:
+                tracer.request_done(rid, now, resp.latency_s)
+            self._record(resp, resp.latency_s, now)
         for req, _ in tile.entries:               # retired: prune stamps
             self._t_fed.pop(req.request_id, None)
             self._keys.pop(req.request_id, None)
@@ -669,7 +755,8 @@ class SortSession:
             while len(e._cache) > e.config.cache_size:
                 e._cache.popitem(last=False)          # evict LRU
 
-    def _record(self, resp: SortResponse, latency: float) -> None:
+    def _record(self, resp: SortResponse, latency: float,
+                now: float | None = None) -> None:
         e = self.engine
         self._stats["completed"] += 1
         e._agg["requests"] += 1
@@ -678,6 +765,7 @@ class SortSession:
         e._lat_count += 1
         self._lat.append(latency)
         self._out.append(resp)
+        e._metrics.request_done(e._clock() if now is None else now, latency)
 
     def _take(self) -> list[SortResponse]:
         out, self._out = self._out, []

@@ -132,6 +132,11 @@ class BankPool:
     def shards_for(self, n_cols: int) -> int:
         return -(-n_cols // self.bank_width)
 
+    def bank_labels(self) -> list[str]:
+        """Human-readable per-bank track names (trace export).  Mesh pools
+        override this to name the device each bank is pinned to."""
+        return [f"bank {b.index}" for b in self.banks]
+
     def try_place(self, tile: Tile, tile_id: int) -> _Placement | None:
         """Reserve a shard group for the tile, least-occupied banks first."""
         b_rows, n_cols = tile.shape
@@ -372,6 +377,7 @@ class _Flight:
     result: object
     total_cycles: int | None        # exact cycles for pool telemetry credit
     duration_vt: float              # per-wave virtual service time
+    admit_vt: float = 0.0           # event-clock instant the tile was placed
     cancelled: bool = False
 
 
@@ -403,9 +409,14 @@ class ContinuousScheduler:
     """
 
     def __init__(self, pool: BankPool, *,
-                 policy: AdmissionPolicy | None = None):
+                 policy: AdmissionPolicy | None = None,
+                 on_event: Callable | None = None):
         self.pool = pool
         self.policy = policy
+        # on_event(kind, tile, vt, **attrs) — the flight-recorder hook.
+        # kinds: arrive / defer / shed / admit / early / retire / exec_fail.
+        # None (the default) keeps the event loop observation-free.
+        self.on_event = on_event
         self.stats = ContinuousStats()
         self.vt = 0.0                       # the event clock (virtual cycles)
         self._heap: list = []               # (t, seq, kind, payload)
@@ -463,6 +474,9 @@ class ContinuousScheduler:
                 self.stats.busy_bank_vt += (payload.duration_vt
                                             * (pl.waves - 1)
                                             * len(pl.early_banks))
+                if self.on_event is not None:
+                    self.on_event("early", payload.job.tile, self.vt,
+                                  bank_ids=list(pl.early_banks))
                 self._drain_queue(mid_wave=True)
             else:                                          # _RETIRE
                 fl = payload
@@ -475,6 +489,14 @@ class ContinuousScheduler:
                 self.stats.drains += 1
                 self.stats.makespan_vt = max(self.stats.makespan_vt, self.vt)
                 self._inflight.remove(fl)
+                if self.on_event is not None:
+                    self.on_event(
+                        "retire", fl.job.tile, self.vt,
+                        admit_vt=fl.admit_vt, duration_vt=fl.duration_vt,
+                        waves=pl.waves, bank_ids=list(pl.bank_ids),
+                        early_banks=(list(pl.early_banks)
+                                     if pl.early_released else []),
+                        total_cycles=fl.total_cycles)
                 if fl.job.sink is not None:
                     fl.job.sink(fl.job.tile, fl.result, None)
                 self._drain_queue(mid_wave=False)
@@ -485,6 +507,8 @@ class ContinuousScheduler:
         if job.defers == 0:                 # deferred re-arrivals count once
             self.stats.arrivals += 1
             job.arrive_vt = max(job.arrive_vt, self.vt)
+            if self.on_event is not None:
+                self.on_event("arrive", job.tile, self.vt)
         action, retry = ACCEPT, 0.0
         if self.policy is not None:
             busy = sum(1 for b in self.pool.banks if b.loaded)
@@ -495,6 +519,9 @@ class ContinuousScheduler:
                 defers=job.defers)
         if action == SHED:
             self.stats.shed += 1
+            if self.on_event is not None:
+                self.on_event("shed", job.tile, self.vt,
+                              depth=len(self._queue), retry_after_vt=retry)
             exc = ShedError(
                 f"admission shed at queue depth {len(self._queue)} "
                 f"(vt={self.vt:.0f})", retry_after_vt=retry)
@@ -506,6 +533,9 @@ class ContinuousScheduler:
         if action == DEFER:
             self.stats.deferred += 1
             job.defers += 1
+            if self.on_event is not None:
+                self.on_event("defer", job.tile, self.vt,
+                              retry_after_vt=retry, defers=job.defers)
             heapq.heappush(self._heap, (self.vt + max(retry, 1.0),
                                         next(self._seq), _ARRIVE, job))
             return
@@ -528,6 +558,10 @@ class ContinuousScheduler:
         in_flight = sum(1 for b in self.pool.banks if b.loaded)
         self.stats.max_banks_in_flight = max(
             self.stats.max_banks_in_flight, in_flight)
+        if self.on_event is not None:
+            self.on_event("admit", job.tile, self.vt,
+                          bank_ids=list(pl.bank_ids), waves=pl.waves,
+                          queue_wait_vt=self.vt - job.arrive_vt)
         try:
             result = job.execute(job.tile)
         except BaseException as exc:
@@ -537,6 +571,9 @@ class ContinuousScheduler:
                 if pl.tile_id in bank.loaded:
                     bank.release(pl.tile_id, b_rows)
             self.stats.exec_failures += 1
+            if self.on_event is not None:
+                self.on_event("exec_fail", job.tile, self.vt,
+                              error=type(exc).__name__)
             # the sink hears about the failure in BOTH modes, so a session's
             # bookkeeping stays coherent (requests leave the outstanding set
             # and can be re-fed) even when the exception propagates
@@ -549,7 +586,7 @@ class ContinuousScheduler:
         total = int(cycles.sum()) if cycles is not None else None
         dur = float(total) if total is not None else float(
             getattr(result, "estimated_cycles", None) or 0.0)
-        fl = _Flight(job, pl, result, total, dur)
+        fl = _Flight(job, pl, result, total, dur, admit_vt=self.vt)
         self._inflight.append(fl)
         if pl.waves > 1 and pl.early_banks:
             heapq.heappush(self._heap, (self.vt + dur * (pl.waves - 1),
@@ -633,6 +670,10 @@ class ContinuousScheduler:
     def idle(self) -> bool:
         """True when no event, queued tile, or in-flight tile remains."""
         return not (self._heap or self._queue or self._inflight)
+
+    def queue_depth(self) -> int:
+        """Current admission-queue depth (the live windowed-metrics gauge)."""
+        return len(self._queue)
 
     # ------------------------------------------------- flushed-batch frontend
     def run(self, tiles: list[Tile],

@@ -39,6 +39,10 @@ def flatten_keys(obj, prefix="") -> set[str]:
                 name = "<backend>"
             elif prefix == "modeled_hw_throughput_num_per_s.":
                 name = "<width>"
+            elif prefix == "calibration.":
+                name = "<backend>"
+            elif prefix == "calibration.<backend>.":
+                name = "<width>"
             keys |= flatten_keys(v, f"{prefix}{name}.")
     elif isinstance(obj, list):
         for v in obj:
@@ -74,6 +78,12 @@ def live_keys() -> set[str]:
              for i in range(2)]
     reqs += [SortRequest("sort", np.arange(128, dtype=np.uint32))]
     s.feed(reqs, flush=True)
+    s.drain()
+    # a second round with fresh payloads (no result-cache hits) runs on warm
+    # executors, so the warm-gated calibration table gains its rows
+    warm = [SortRequest("sort", np.arange(16, dtype=np.uint32) + 100 + i)
+            for i in range(4)]
+    s.feed(warm, flush=True)
     s.drain()
     return (flatten_keys(eng.telemetry())
             | {f"session.{k}" for k in flatten_keys(s.telemetry())})

@@ -457,6 +457,12 @@ def test_failed_batch_rolls_back_all_telemetry():
                        bad])
     after = engine.telemetry()
     before.pop("executor_cache"), after.pop("executor_cache")
+    # sliding-window rates divide by the wall clock at read time, so the
+    # two reads can't be compared whole — the windowed *counts* must roll
+    # back exactly
+    win_before, win_after = before.pop("window"), after.pop("window")
+    for key in ("requests", "tiles", "shed", "failed"):
+        assert win_after[key] == win_before[key]
     assert after == before
 
 
