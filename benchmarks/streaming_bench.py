@@ -357,6 +357,58 @@ def _bench_tracing_overhead(report):
     return ok
 
 
+def _bench_export_overhead(report):
+    """Metrics-export overhead gate (the BENCH_7 acceptance row).
+
+    A warm engine that has served the canonical workload holds a fully
+    populated registry (per-backend/per-op/per-bank counters, histograms
+    with thousands of samples, windows, calibration).  One scrape of the
+    OpenMetrics exposition (``dump_metrics(None)`` = snapshot capture +
+    text render) is timed against one ``telemetry()`` call — the existing
+    in-process observability read that every session already pays.
+    Measured passes alternate between the two (best-of-200 each) so clock
+    drift cancels; the exposition must stay within 5% of the telemetry
+    read (``ratio <= 1.05``), i.e. a Prometheus scrape costs no more than
+    the dict the dashboards already build.  Both are pure reads off the
+    serving path — the gate keeps the exporter from ever growing a sort,
+    a deepcopy, or an O(samples) percentile pass."""
+    from repro.launch.sortserve import make_workload
+    from repro.obs import SLOTarget, Tracer
+
+    engine = SortServeEngine(EngineConfig(
+        cache_size=0, tracer=Tracer(),
+        slo={"bench": SLOTarget(p99_latency_s=0.05)}))
+    for rnd in range(2):                # warm: populate every registry row
+        session = engine.begin(traffic_class="bench", strict=False)
+        session.feed(make_workload(96, min_len=16, max_len=512,
+                                   seed=100 + rnd), flush=True)
+        session.drain()
+
+    calls = {"telemetry": lambda: engine.telemetry(),
+             "export": lambda: engine.dump_metrics(None)}
+    for fn in calls.values():           # untimed settle pass
+        fn()
+    gc.collect()
+    best = {"telemetry": float("inf"), "export": float("inf")}
+    for _ in range(200):
+        for mode, fn in calls.items():  # interleave so drift cancels
+            t0 = time.perf_counter()
+            fn()
+            best[mode] = min(best[mode], time.perf_counter() - t0)
+    lines = len(engine.dump_metrics(None).splitlines())
+    ratio = best["export"] / best["telemetry"] if best["telemetry"] else 0.0
+    ok = ratio <= 1.05
+    report(
+        name="streaming/export_overhead",
+        us_per_call=best["export"] * 1e6,
+        derived=(f"telemetry={best['telemetry'] * 1e6:.0f}us "
+                 f"export={best['export'] * 1e6:.0f}us "
+                 f"lines={lines} ratio={ratio:.3f} "
+                 + ("PASS" if ok else "MISS")),
+    )
+    return ok
+
+
 def run(report, mesh: bool = False):
     # Poisson steady traffic: ~70% offered load on the 8-bank pool
     trace_p = poisson_trace(400, seed=11, mean_gap=2400.0)
@@ -372,6 +424,9 @@ def run(report, mesh: bool = False):
     # flight-recorder overhead: tracer on vs off through a real engine (the
     # BENCH_6 acceptance row — on must stay within 5% of off)
     _bench_tracing_overhead(report)
+    # metrics-export overhead: one OpenMetrics scrape vs one telemetry()
+    # read on a warm engine (the BENCH_7 acceptance row — ratio <= 1.05)
+    _bench_export_overhead(report)
     if mesh:
         _bench_real_session(report, mesh=True)
 

@@ -1,0 +1,86 @@
+"""Gate a fresh benchmark run against the committed BENCH_*.json trajectory.
+
+    PYTHONPATH=src python -m benchmarks.run --only streaming --out fresh.json
+    python scripts/bench_diff.py fresh.json BENCH_7.json [--tolerance 4.0]
+
+Compares the two row sets by ``name`` and fails (exit 1) when the fresh
+run *regresses* against the committed baseline:
+
+  * a row whose baseline ``derived`` says PASS now says MISS — the
+    acceptance claim behind a PR stopped holding;
+  * a baseline row disappeared from the fresh run — silent coverage loss
+    (new rows in the fresh run are fine: they are the next PR's baseline);
+  * ``us_per_call`` grew beyond ``--tolerance``× the baseline — the
+    default 4.0 is deliberately generous because these are wall-clock
+    numbers on shared CI machines; the gate exists to catch order-of-
+    magnitude cliffs, not scheduler jitter.
+
+Rows whose baseline ``us_per_call`` is 0 (SKIPped benches) are exempt
+from the slowdown check, and PASS/MISS is only compared when the baseline
+row carries a verdict at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _verdict(derived: str) -> str | None:
+    for word in ("PASS", "MISS"):
+        if word in derived.split():
+            return word
+    return None
+
+
+def diff(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Regression list (empty = gate passes)."""
+    fresh_rows = {r["name"]: r for r in fresh.get("rows", [])}
+    problems = []
+    for name, base in ((r["name"], r) for r in baseline.get("rows", [])):
+        got = fresh_rows.get(name)
+        if got is None:
+            problems.append(f"{name}: row missing from fresh run")
+            continue
+        want_v, got_v = _verdict(base["derived"]), _verdict(got["derived"])
+        if want_v == "PASS" and got_v == "MISS":
+            problems.append(f"{name}: PASS -> MISS ({got['derived']})")
+        base_us, got_us = base["us_per_call"], got["us_per_call"]
+        if base_us > 0 and got_us > tolerance * base_us:
+            problems.append(
+                f"{name}: {got_us:.1f}us > {tolerance:.1f}x baseline "
+                f"{base_us:.1f}us")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="JSON from a fresh benchmarks.run --out")
+    ap.add_argument("baseline", help="committed BENCH_*.json to gate against")
+    ap.add_argument("--tolerance", type=float, default=4.0,
+                    help="allowed us_per_call growth factor (default 4.0 — "
+                         "wall-clock CI jitter is real; catch cliffs, not "
+                         "noise)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    problems = diff(fresh, baseline, args.tolerance)
+    checked = len(baseline.get("rows", []))
+    if problems:
+        print(f"bench_diff: {len(problems)}/{checked} baseline rows "
+              f"regressed vs {args.baseline}:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"bench_diff: {checked} baseline rows hold "
+          f"(tolerance {args.tolerance:.1f}x) vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Render the per-traffic-class SLO burn-rate table.
+
+    PYTHONPATH=src python scripts/slo_report.py snapshot.json [more.json ...]
+    PYTHONPATH=src python scripts/slo_report.py --live [--requests N]
+
+Reads one or more mergeable telemetry snapshots (``engine.dump_snapshot`` /
+``launch.sortserve --snapshot-out``), folds them into a fleet view, and
+prints per-class / per-SLI burn rates against the configured error budgets.
+A burn rate of 1.0 consumes the budget exactly at the objective's pace;
+``>= burn_threshold`` on both windows is the alerting condition.  With
+``--live`` a small overloaded workload is served in-process instead so the
+table is populated end to end.  Exit code 1 when any class is alerting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def render(slo: dict) -> int:
+    if not slo:
+        print("slo section is empty — the engine was built without "
+              "EngineConfig(slo=...) targets, or no configured traffic "
+              "class has seen a request yet")
+        return 1
+    print(f"{'class':<12} {'sli':<8} {'objective':>9} {'good':>7} {'bad':>6} "
+          f"{'burn_long':>10} {'burn_short':>11} {'alerts':>7} {'state':>9}")
+    alerting = False
+    for cls in sorted(slo):
+        for sli in ("latency", "shed"):
+            row = slo[cls].get(sli)
+            if row is None:
+                continue
+            state = "ALERTING" if row["alerting"] else "ok"
+            alerting = alerting or row["alerting"]
+            print(f"{cls:<12} {sli:<8} {row['objective']:>9.4f} "
+                  f"{row['good']:>7} {row['bad']:>6} "
+                  f"{row['burn_long']:>10.2f} {row['burn_short']:>11.2f} "
+                  f"{row['alerts']:>7} {state:>9}")
+        cfg = slo[cls].get("config", {})
+        if cfg:
+            print(f"{'':<12} windows: long={cfg['long_window_s']:.0f}s "
+                  f"short={cfg['short_window_s']:.0f}s "
+                  f"threshold={cfg['burn_threshold']:.1f}")
+    return 1 if alerting else 0
+
+
+def live_slo(requests: int, seed: int) -> dict:
+    from repro.launch.sortserve import make_workload
+    from repro.obs import SLOTarget
+    from repro.sortserve import EngineConfig, SortServeEngine
+
+    engine = SortServeEngine(EngineConfig(
+        cache_size=0,
+        slo={"live": SLOTarget(p99_latency_s=0.05)},
+    ))
+    session = engine.begin(traffic_class="live", strict=False)
+    session.feed(make_workload(requests, min_len=16, max_len=512, seed=seed),
+                 flush=True)
+    session.drain()
+    return engine.telemetry()["slo"]
+
+
+def fleet_slo(paths: list[str]) -> dict:
+    from repro.obs import merge_snapshots
+    from repro.obs.aggregate import TelemetrySnapshot
+
+    merged = merge_snapshots(TelemetrySnapshot.load(p) for p in paths)
+    return merged.fleet_view().get("slo", {})
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("snapshots", nargs="*",
+                    help="telemetry snapshot JSONs from engine.dump_snapshot "
+                         "/ launch.sortserve --snapshot-out (merged before "
+                         "rendering)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve a workload in-process instead of reading "
+                         "snapshot files")
+    ap.add_argument("--requests", type=int, default=40,
+                    help="requests to serve with --live")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.live:
+        slo = live_slo(args.requests, args.seed)
+    elif args.snapshots:
+        slo = fleet_slo(args.snapshots)
+    else:
+        ap.error("give snapshot JSON path(s) or --live")
+    return render(slo)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,6 +105,13 @@ def main(argv=None):
     ap.add_argument("--trace", default="",
                     help="enable the flight recorder and write the Chrome "
                          "trace-event JSON here (view at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="", dest="metrics_out",
+                    help="write the OpenMetrics/Prometheus text exposition "
+                         "of the final telemetry here")
+    ap.add_argument("--snapshot-out", default="", dest="snapshot_out",
+                    help="write the mergeable telemetry snapshot JSON here "
+                         "(fold several with scripts/slo_report.py or "
+                         "repro.obs.merge_snapshots)")
     args = ap.parse_args(argv)
 
     backends = tuple(s for s in args.backends.split(",") if s)
@@ -202,6 +209,13 @@ def main(argv=None):
         doc = engine.dump_trace(args.trace)
         print(f"trace: {len(doc['traceEvents'])} events "
               f"({tracer.span_count()} request chains) -> {args.trace}")
+    if args.metrics_out:
+        text = engine.dump_metrics(args.metrics_out)
+        print(f"metrics: {len(text.splitlines())} exposition lines "
+              f"-> {args.metrics_out}")
+    if args.snapshot_out:
+        engine.dump_snapshot(args.snapshot_out, source="launch.sortserve")
+        print(f"snapshot -> {args.snapshot_out}")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

@@ -1,14 +1,19 @@
 """Flight-recorder observability: span tracing, windowed metrics,
-measured-vs-modeled calibration.
+measured-vs-modeled calibration, cross-engine aggregation, OpenMetrics
+export, and SLO burn-rate tracking.
 
 Everything here is engine-facing and clock-explicit: the engine injects
 its own clock readings into every hook, so all of it is deterministic
 under a fake clock and adds nothing to the serving path when unused.
 """
 
+from repro.obs.aggregate import TelemetrySnapshot, merge_snapshots
 from repro.obs.calibration import CalibrationTable
+from repro.obs.export import (parse_exposition, render_openmetrics,
+                              write_metrics)
 from repro.obs.metrics import (Gauge, LogBucketHistogram, MetricsRegistry,
                                WindowedCounter)
+from repro.obs.slo import SLOTarget, SLOTracker
 from repro.obs.tracer import Tracer
 
 __all__ = [
@@ -16,6 +21,13 @@ __all__ = [
     "Gauge",
     "LogBucketHistogram",
     "MetricsRegistry",
+    "SLOTarget",
+    "SLOTracker",
+    "TelemetrySnapshot",
     "Tracer",
     "WindowedCounter",
+    "merge_snapshots",
+    "parse_exposition",
+    "render_openmetrics",
+    "write_metrics",
 ]

@@ -82,19 +82,31 @@ class WindowedCounter:
 
 
 class Gauge:
-    """Last-written value (point-in-time signals: queue depth, inflight)."""
+    """Last-written value (point-in-time signals: queue depth, inflight).
 
-    def __init__(self, value: float = 0.0):
+    Writes are timestamped (``set(now, value)``) so that two gauges from
+    different engine snapshots merge **last-writer-wins deterministically**:
+    the aggregation layer orders by ``(t, value)`` — the value tie-break
+    makes the merge associative even when two engines wrote at the same
+    clock instant (fake clocks do that all the time)."""
+
+    def __init__(self, value: float = 0.0, t: float = float("-inf")):
+        self.value = float(value)
+        self.t = float(t)
+
+    def set(self, now: float, value: float) -> None:
+        self.t = float(now)
         self.value = float(value)
 
-    def set(self, value: float) -> None:
-        self.value = float(value)
+    def merge_key(self) -> tuple[float, float]:
+        """Total order for last-writer-wins merging."""
+        return (self.t, self.value)
 
-    def snapshot(self) -> float:
-        return self.value
+    def snapshot(self) -> tuple[float, float]:
+        return (self.t, self.value)
 
-    def restore(self, snap: float) -> None:
-        self.value = snap
+    def restore(self, snap: tuple[float, float]) -> None:
+        self.t, self.value = snap
 
 
 class LogBucketHistogram:
@@ -180,6 +192,9 @@ class MetricsRegistry:
         self.failed = WindowedCounter(window_s)
         self.latency = LogBucketHistogram(window_s, maxlen=maxlen)
         self.occupancy = LogBucketHistogram(window_s, maxlen=maxlen, lo=1e-4)
+        # timestamped point-in-time signals; last-writer-wins on merge
+        self.queue_depth_g = Gauge()
+        self.occupancy_g = Gauge()
 
     def request_done(self, now: float, latency_s: float) -> None:
         self.requests.add(now)
@@ -191,12 +206,14 @@ class MetricsRegistry:
     def tile_executed(self, now: float, occupancy: float) -> None:
         self.tiles.add(now)
         self.occupancy.observe(now, occupancy)
+        self.occupancy_g.set(now, occupancy)
 
     def window(self, now: float, queue_depth: int) -> dict:
         """The live placement signal: recent counts, rates, latency
         quantiles, occupancy, and shed rate over the sliding window."""
         n_req = self.requests.total(now)
         n_shed = self.shed.total(now)
+        self.queue_depth_g.set(now, queue_depth)
         return {
             "window_s": self.window_s,
             "requests": n_req,
@@ -218,7 +235,8 @@ class MetricsRegistry:
     def snapshot(self) -> dict:
         return {name: getattr(self, name).snapshot()
                 for name in ("requests", "tiles", "shed", "failed",
-                             "latency", "occupancy")}
+                             "latency", "occupancy",
+                             "queue_depth_g", "occupancy_g")}
 
     def restore(self, snap: dict) -> None:
         for name, sub in snap.items():

@@ -226,6 +226,18 @@ class Tracer:
         record["estimated_cycles"] = estimated
 
     # ----------------------------------------------------- scheduler stream
+    def alert(self, vt: float, wall: float, traffic_class: str, sli: str,
+              burn_long: float, burn_short: float) -> None:
+        """An SLO burn-rate alert fired (:mod:`repro.obs.slo`): recorded as
+        an ALERT instant in the scheduler-event ring, so the page-worthy
+        moment is visible on the same track as the ARRIVE/SHED story that
+        caused it.  ``seq`` is 0 — alerts are per (class, SLI), not per
+        tile."""
+        self._events.append(("alert", 0, vt,
+                             {"wall": wall, "traffic_class": traffic_class,
+                              "sli": sli, "burn_long": burn_long,
+                              "burn_short": burn_short}))
+
     def sched_event(self, kind: str, tile, vt: float, **attrs) -> None:
         """The scheduler's ``on_event`` hook: ARRIVE / ADMIT / DEFER / SHED
         / EARLY / RETIRE land in one ring, and terminal events close the

@@ -77,8 +77,11 @@ from .backends import (
 from .batcher import Batcher, Tile
 from .request import SortRequest, SortResponse, decode_values
 from .scheduler import BankPool, ContinuousScheduler, ShedError
+from repro.obs.aggregate import TelemetrySnapshot, capture
 from repro.obs.calibration import CalibrationTable
+from repro.obs.export import render_openmetrics
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOTracker
 
 __all__ = ["AsyncSortServe", "EngineConfig", "RetryAfter", "SortServeEngine",
            "SortSession"]
@@ -123,6 +126,9 @@ class EngineConfig:
                                      # default) keeps the serving path
                                      # recorder-free
     metrics_window_s: float = 60.0   # sliding window behind telemetry "window"
+    slo: dict | None = None          # traffic-class -> repro.obs.SLOTarget:
+                                     # burn-rate tracking behind
+                                     # telemetry()["slo"]; None disables
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -183,6 +189,11 @@ class SortServeEngine:
         self._tracer = self.config.tracer
         self._metrics = MetricsRegistry(self.config.metrics_window_s)
         self._calib = CalibrationTable()
+        # per-traffic-class SLO burn-rate tracking (opt-in, like the tracer);
+        # fed at the same hook points as the windowed metrics, alert
+        # transitions land as ALERT instants in the tracer event stream
+        self._slo = (SLOTracker(self.config.slo)
+                     if self.config.slo else None)
         # one persistent event-clock scheduler for the engine's lifetime;
         # the admission policy (if any) gates arrivals under overload
         self.scheduler = ContinuousScheduler(
@@ -209,7 +220,7 @@ class SortServeEngine:
             "requests": 0, "column_reads": 0, "cycles_exact": 0,
             "cycles_estimated": 0.0, "verify_failures": 0,
             "cache_hits": 0, "cache_misses": 0,
-            "per_backend": {}, "modeled_hw": {},
+            "per_backend": {}, "per_op": {}, "modeled_hw": {},
         }
 
     # -------------------------------------------------------------- cache
@@ -276,6 +287,10 @@ class SortServeEngine:
             lat=(list(self._latencies), self._lat_sum, self._lat_count),
             metrics=self._metrics.snapshot(),
             calib=self._calib.snapshot(),
+            slo=None if self._slo is None else self._slo.snapshot(),
+            # the scheduler's drain-rate ring feeds live retry-after hints
+            # and telemetry, so it rolls back like every other signal
+            drains=list(self.scheduler._drain_vts),
             # admission-policy state (watermark hysteresis, crossing count)
             # is telemetry-visible, so it rolls back with everything else
             policy=(None if self.scheduler.policy is None
@@ -304,6 +319,10 @@ class SortServeEngine:
         # such in submit's except path)
         self._metrics.restore(snap["metrics"])
         self._calib.restore(snap["calib"])
+        if snap["slo"] is not None:
+            self._slo.restore(snap["slo"])
+        self.scheduler._drain_vts = deque(
+            snap["drains"], maxlen=self.scheduler._drain_vts.maxlen)
         if snap["policy"] is not None:
             # clear first: attributes the failed batch *created* (e.g. a
             # lazily-initialized counter) must not survive the rollback
@@ -466,6 +485,42 @@ class SortServeEngine:
             )
 
     # ------------------------------------------------------------- telemetry
+    # clamp bounds for the live retry-after hint: never 0 (callers must
+    # actually back off), never unbounded (a cold engine with an empty
+    # window must not tell callers to go away for minutes)
+    _RETRY_AFTER_MIN_S = 1e-3
+    _RETRY_AFTER_MAX_S = 5.0
+    _RETRY_AFTER_DEFAULT_S = 0.02
+
+    def retry_after_s(self, now: float | None = None) -> float:
+        """Live back-off hint: the time the current queue needs to drain.
+
+        Derived from the windowed drain rate — ``(queue_depth + 1) /
+        window.tiles_per_s`` (the +1 is the caller's own tile) — falling
+        back to the measured mean wall per tile spread over the banks when
+        the window is empty, and to a small constant on a cold engine.
+        Clamped to [1 ms, 5 s]; deterministic under a fake clock."""
+        with self._lock:
+            return self._retry_after_at(
+                self._clock() if now is None else now)
+
+    def _retry_after_at(self, now: float) -> float:
+        depth = self.scheduler.queue_depth()
+        tiles_per_s = self._metrics.tiles.rate(now)
+        if tiles_per_s > 0:
+            hint = (depth + 1.0) / tiles_per_s
+        else:
+            pb = self._agg["per_backend"]
+            tiles = sum(v["tiles"] for v in pb.values())
+            wall = sum(v["wall_s"] for v in pb.values())
+            if tiles > 0 and wall > 0:
+                hint = ((depth + 1.0) * (wall / tiles)
+                        / len(self.pool.banks))
+            else:
+                hint = self._RETRY_AFTER_DEFAULT_S
+        return min(max(hint, self._RETRY_AFTER_MIN_S),
+                   self._RETRY_AFTER_MAX_S)
+
     def _executor_cache_stats(self) -> dict:
         hits, misses = self._exec_stats["hits"], self._exec_stats["misses"]
         return {"hits": hits, "misses": misses,
@@ -474,6 +529,7 @@ class SortServeEngine:
                 "size": EXECUTOR_CACHE.counters()[2]}
 
     def telemetry(self) -> dict:
+        now = self._clock()
         lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
         bs = self.batcher.stats
         cache_hit_rate = (self._agg["cache_hits"] /
@@ -499,6 +555,7 @@ class SortServeEngine:
             "verify_failures": self._agg["verify_failures"],
             # copies: exported telemetry must not alias internal counters
             "per_backend": copy.deepcopy(self._agg["per_backend"]),
+            "per_op": dict(self._agg["per_op"]),
             "cache": {
                 "hits": self._agg["cache_hits"],
                 "misses": self._agg["cache_misses"],
@@ -524,9 +581,16 @@ class SortServeEngine:
             "modeled_hw_throughput_num_per_s": dict(self._agg["modeled_hw"]),
             # sliding-window live signals (the fleet router's placement
             # input) and the per-(backend, width) measured-vs-modeled table
-            "window": self._metrics.window(self._clock(),
-                                           self.scheduler.queue_depth()),
+            "window": {
+                **self._metrics.window(now, self.scheduler.queue_depth()),
+                "retry_after_s": self._retry_after_at(now),
+            },
             "calibration": self._calib.table(),
+            # per-class SLO burn rates + alert state ({} unless configured
+            # via EngineConfig(slo=...)); read-only — alert transitions
+            # happen at event time, never at render
+            "slo": (self._slo.section(now)
+                    if self._slo is not None else {}),
         }
 
     def dump_telemetry(self, path: str) -> dict:
@@ -534,6 +598,35 @@ class SortServeEngine:
         with open(path, "w") as f:
             json.dump(telem, f, indent=2, sort_keys=True)
         return telem
+
+    def telemetry_snapshot(self, source: str | None = None) -> TelemetrySnapshot:
+        """Raw-accumulator snapshot for cross-engine aggregation
+        (:mod:`repro.obs.aggregate`) — counters, timestamped gauges, log2
+        histogram buckets, windowed events, calibration sums, SLO state.
+        Taken under the engine lock: one consistent instant."""
+        with self._lock:
+            return capture(self, source=source)
+
+    def dump_snapshot(self, path: str,
+                      source: str | None = None) -> TelemetrySnapshot:
+        """Write the mergeable telemetry snapshot as JSON (the per-replica
+        artifact a fleet view folds together)."""
+        snap = self.telemetry_snapshot(source=source)
+        snap.dump(path)
+        return snap
+
+    def dump_metrics(self, path: str | None = None,
+                     source: str | None = None) -> str:
+        """Render current telemetry as OpenMetrics/Prometheus text
+        exposition; write it to ``path`` when given.  The render works
+        from the raw snapshot (no percentile sorts, no deep copies), so
+        it costs no more than a ``telemetry()`` call — gated by the
+        export-overhead row in ``benchmarks/streaming_bench.py``."""
+        text = render_openmetrics(self.telemetry_snapshot(source=source))
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
 
     def dump_trace(self, path: str) -> dict:
         """Export the flight recorder as Chrome trace-event JSON (viewable
@@ -729,6 +822,9 @@ class SortSession:
                 self._stats["shed" if shed else "failed"] += 1
                 self._failures.append((req, exc, len(tile.entries)))
                 e._metrics.request_rejected(now, shed=shed)
+                if shed and e._slo is not None:
+                    e._slo.record_shed(now, self.traffic_class,
+                                       vt=e.scheduler.vt, tracer=e._tracer)
                 if e._tracer is not None:
                     e._tracer.request_failed(req.request_id, now,
                                              "shed" if shed else "failed")
@@ -760,12 +856,18 @@ class SortSession:
         e = self.engine
         self._stats["completed"] += 1
         e._agg["requests"] += 1
+        per_op = e._agg["per_op"]
+        per_op[resp.op] = per_op.get(resp.op, 0) + 1
         e._latencies.append(latency)
         e._lat_sum += latency
         e._lat_count += 1
         self._lat.append(latency)
         self._out.append(resp)
-        e._metrics.request_done(e._clock() if now is None else now, latency)
+        now = e._clock() if now is None else now
+        e._metrics.request_done(now, latency)
+        if e._slo is not None:
+            e._slo.record_done(now, self.traffic_class, latency,
+                               vt=e.scheduler.vt, tracer=e._tracer)
 
     def _take(self) -> list[SortResponse]:
         out, self._out = self._out, []
@@ -878,18 +980,24 @@ class AsyncSortServe:
             if (self.max_inflight is not None
                     and self._inflight >= self.max_inflight):
                 # the bounded-inflight semaphore: refuse deterministically
-                # instead of growing the queue/heap under overload
+                # instead of growing the queue/heap under overload; the
+                # hint is live — queue depth over the windowed drain rate
                 self.rejected += 1
                 self._resolve(fut, exc=RetryAfter(
                     f"{self._inflight} requests in flight >= max_inflight="
                     f"{self.max_inflight}; retry later",
-                    retry_after_s=self.max_wait_s))
+                    retry_after_s=self.engine.retry_after_s(self._clock())))
                 return fut
             self._inflight += 1
             # stamp arrival here, on the caller's side of the queue: bucket
             # age and latency count from submission, not collector pickup
             self._q.put((request, fut, self._clock()))
         return fut
+
+    def metrics(self) -> str:
+        """The front door's pull endpoint: current telemetry rendered as
+        OpenMetrics text exposition (what a scraper would GET)."""
+        return self.engine.dump_metrics()
 
     def close(self) -> None:
         """Serve everything already accepted, then stop the collector.
@@ -956,10 +1064,14 @@ class AsyncSortServe:
                 continue
             if isinstance(exc, ShedError):
                 # admission-policy backpressure: deterministic caller-visible
-                # deferral; a retry here would re-enter the overloaded queue
+                # deferral; a retry here would re-enter the overloaded queue.
+                # The hint is the engine's live drain-rate estimate of how
+                # long the queue ahead needs, not a fixed constant
                 self._pending.pop(rid)
                 self._retried.discard(rid)
-                retry = RetryAfter(str(exc), retry_after_s=self.max_wait_s)
+                retry = RetryAfter(
+                    str(exc),
+                    retry_after_s=self.engine.retry_after_s(self._clock()))
                 retry.__cause__ = exc
                 self._finish(item[1], exc=retry)
             elif co_batched > 1 and rid not in self._retried:

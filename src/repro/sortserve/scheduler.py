@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -424,6 +425,10 @@ class ContinuousScheduler:
         self._ids = itertools.count()
         self._queue: list[_Job] = []        # FIFO, skip-scan admitted
         self._inflight: list[_Flight] = []
+        # virtual-time stamps of recent retires: the live drain-rate signal
+        # behind retry-after hints (bounded; snapshotted by the engine for
+        # all-or-nothing submit rollback)
+        self._drain_vts: deque = deque(maxlen=256)
 
     # ------------------------------------------------------------- ingress
     def feed(self, tiles, execute: Callable[[Tile], object], sink=None, *,
@@ -488,6 +493,7 @@ class ContinuousScheduler:
                                             * len(banks_left))
                 self.stats.drains += 1
                 self.stats.makespan_vt = max(self.stats.makespan_vt, self.vt)
+                self._drain_vts.append(self.vt)
                 self._inflight.remove(fl)
                 if self.on_event is not None:
                     self.on_event(
@@ -675,6 +681,15 @@ class ContinuousScheduler:
         """Current admission-queue depth (the live windowed-metrics gauge)."""
         return len(self._queue)
 
+    def drain_rate_vt(self) -> float:
+        """Recent retires per virtual cycle over the bounded drain window
+        (0.0 until two retires at distinct instants exist) — the signal
+        retry-after hints and the fleet router derive service rate from."""
+        d = self._drain_vts
+        if len(d) < 2 or d[-1] <= d[0]:
+            return 0.0
+        return (len(d) - 1) / (d[-1] - d[0])
+
     # ------------------------------------------------- flushed-batch frontend
     def run(self, tiles: list[Tile],
             execute: Callable[[Tile], object]) -> list[tuple[Tile, object]]:
@@ -730,5 +745,6 @@ class ContinuousScheduler:
                 "busy_bank_vt": s.busy_bank_vt,
                 "makespan_vt": s.makespan_vt,
                 "occupancy": occupancy,
+                "drain_rate_vt": self.drain_rate_vt(),
             },
         }

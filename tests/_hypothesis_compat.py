@@ -29,10 +29,15 @@ except ModuleNotFoundError:  # pragma: no cover - exercised on bare installs
     settings = _skip_deco
 
     class _AnyStrategy:
-        """Swallows st.lists(...), st.integers(...), etc."""
+        """Swallows st.lists(...), st.integers(...).map(f), etc. —
+        every strategy call and chained combinator yields the same inert
+        object, so module-level strategy definitions import cleanly."""
 
         def __getattr__(self, name):
-            return lambda *a, **kw: None
+            return self
+
+        def __call__(self, *a, **kw):
+            return self
 
     st = _AnyStrategy()
 

@@ -43,6 +43,10 @@ def flatten_keys(obj, prefix="") -> set[str]:
                 name = "<backend>"
             elif prefix == "calibration.<backend>.":
                 name = "<width>"
+            elif prefix == "per_op.":
+                name = "<op>"
+            elif prefix == "slo.":
+                name = "<class>"
             keys |= flatten_keys(v, f"{prefix}{name}.")
     elif isinstance(obj, list):
         for v in obj:
@@ -67,10 +71,13 @@ def documented_keys() -> set[str]:
 def live_keys() -> set[str]:
     """Engine + session key set from a live serve covering every section
     (multiple backends, a traffic class, an admission policy)."""
+    from repro.obs import SLOTarget
+
     eng = SortServeEngine(EngineConfig(
         backends=("colskip", "radix_topk", "jaxsort", "numpy"),
         tile_rows=2, banks=2, bank_width=64, bank_rows=2, sim_width_cap=64,
-        admission=WatermarkPolicy(high_watermark=8)))
+        admission=WatermarkPolicy(high_watermark=8),
+        slo={"docs": SLOTarget()}))
     s = eng.begin(traffic_class="docs")
     reqs = [SortRequest("sort", np.arange(16, dtype=np.uint32) + i)
             for i in range(4)]

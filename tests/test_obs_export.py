@@ -1,0 +1,313 @@
+"""Fleet observability: export, aggregation, SLO burn-rate alerting.
+
+The acceptance surface:
+
+  * **partition-merge property** — folding any partition of snapshots
+    equals folding the whole (counters / histograms / calibration /
+    windows / SLO state), and the fold is order-independent: the
+    algebra a fleet router relies on to treat "three replicas" and "one
+    bigger replica" uniformly;
+  * **exposition round trip** — a live engine's OpenMetrics text parses
+    back (grammar, TYPE lines, histogram monotonicity, ``# EOF``) to the
+    exact counter values the snapshot holds;
+  * **SLO determinism** — the same fake-clocked overload trace latches
+    the same ALERT at the same instant every run, visible in telemetry,
+    the exposition, and the Chrome trace;
+  * **observation neutrality** — the golden seed-21 workload served with
+    tracing + SLO tracking + a metrics scrape stays byte-identical to
+    the recorded golden telemetry.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import (Gauge, SLOTarget, Tracer, merge_snapshots,
+                       parse_exposition, render_openmetrics)
+from repro.obs.aggregate import PREFIX, TelemetrySnapshot
+from repro.obs.slo import burn_rates
+from repro.sortserve import SortRequest, WatermarkPolicy
+from test_continuous import GOLDEN, FakeClock, make_engine
+
+from repro.launch.sortserve import make_workload
+
+
+def reqs_of(lengths, op="sort", seed=0):
+    rng = np.random.default_rng(seed)
+    return [SortRequest(op=op, payload=rng.integers(
+                0, 1 << 16, size=n, dtype=np.int64).astype(np.uint32))
+            for n in lengths]
+
+
+# ------------------------------------------------------ merge is an algebra
+_TARGET = {"p99_latency_s": 0.05, "latency_objective": 0.99,
+           "shed_rate_target": 0.01, "long_window_s": 60.0,
+           "short_window_s": 5.0, "burn_threshold": 14.4}
+
+_events = st.lists(st.tuples(st.integers(0, 50), st.integers(0, 3)),
+                   max_size=10).map(sorted)
+_binary_events = st.lists(st.tuples(st.integers(0, 50), st.integers(0, 1)),
+                          max_size=10).map(sorted)
+_hist = st.fixed_dictionaries({
+    "lo": st.just(1e-7), "window_s": st.just(60.0), "maxlen": st.just(8),
+    "buckets": st.dictionaries(st.sampled_from(["0", "3", "11"]),
+                               st.integers(0, 9), max_size=3),
+    "count": st.integers(0, 50), "sum": st.integers(0, 500),
+    "samples": _events,
+})
+_window = st.fixed_dictionaries({
+    "window_s": st.just(60.0), "maxlen": st.just(8),
+    "first_t": st.one_of(st.none(), st.integers(0, 50)),
+    "all_time": st.integers(0, 99), "events": _events,
+})
+_sli = st.fixed_dictionaries({
+    "events": _binary_events, "good": st.integers(0, 99),
+    "bad": st.integers(0, 99), "alerts": st.integers(0, 5),
+    "alerting": st.booleans(),
+})
+_snapshot = st.builds(
+    TelemetrySnapshot,
+    sources=st.lists(st.sampled_from(["a", "b", "c"]), min_size=1,
+                     max_size=2),
+    captured_at=st.integers(0, 100),
+    clock_hz=st.sampled_from([0, 500000000]),
+    counters=st.dictionaries(
+        st.sampled_from([PREFIX + "requests_total",
+                         PREFIX + 'op_requests_total{op="sort"}',
+                         PREFIX + "sched_tiles_total"]),
+        st.integers(0, 1000), max_size=3),
+    gauges=st.dictionaries(
+        st.sampled_from([PREFIX + "queue_depth", PREFIX + "occupancy"]),
+        st.tuples(st.integers(0, 100), st.integers(0, 50)).map(list),
+        max_size=2),
+    maxima=st.dictionaries(st.sampled_from([PREFIX + "queued_peak"]),
+                           st.integers(0, 99), max_size=1),
+    histograms=st.dictionaries(
+        st.sampled_from([PREFIX + "latency_seconds"]), _hist, max_size=1),
+    windows=st.dictionaries(
+        st.sampled_from([PREFIX + "window_requests"]), _window, max_size=1),
+    calibration=st.dictionaries(
+        st.sampled_from(["colskip|64", "jaxsort|128"]),
+        st.tuples(st.integers(0, 9), st.integers(0, 9),
+                  st.integers(0, 9)).map(list), max_size=2),
+    slo=st.dictionaries(
+        st.sampled_from(["interactive", "batch"]),
+        st.fixed_dictionaries({"target": st.just(dict(_TARGET)),
+                               "slis": st.dictionaries(
+                                   st.sampled_from(["latency", "shed"]),
+                                   _sli, max_size=2)}),
+        max_size=2),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(snaps=st.lists(_snapshot, min_size=2, max_size=5),
+       split=st.integers(1, 4))
+def test_merging_any_partition_equals_merging_the_whole(snaps, split):
+    """The fold is associative and commutative: (whole) == (left ⊕ right)
+    for every split point, and reversing the fold order changes nothing.
+    Integer-valued snapshots keep float associativity out of the picture —
+    this pins the *merge rules*, not float rounding."""
+    split = min(split, len(snaps) - 1)
+    whole = merge_snapshots(snaps).to_json()
+    left = merge_snapshots(snaps[:split])
+    right = merge_snapshots(snaps[split:])
+    assert merge_snapshots([left, right]).to_json() == whole
+    assert merge_snapshots(reversed(snaps)).to_json() == whole
+
+
+def test_merge_sums_counters_and_pools_calibration():
+    clock = FakeClock()
+    eng = make_engine(clock)
+    for i in range(2):                  # second round runs warm
+        eng.submit(reqs_of([16] * 8, seed=i))
+    a = eng.telemetry_snapshot(source="a")
+    b = TelemetrySnapshot.from_json(a.to_json())
+    b.sources = ["b"]
+    fleet = merge_snapshots([a, b])
+    for sid, value in a.counters.items():
+        assert fleet.counters[sid] == 2 * value
+    for key, (tiles, wall, cyc) in a.calibration.items():
+        assert fleet.calibration[key] == [2 * tiles, 2 * wall, 2 * cyc]
+    for sid, hist in a.histograms.items():
+        assert fleet.histograms[sid]["count"] == 2 * hist["count"]
+        for bkt, n in hist["buckets"].items():
+            assert fleet.histograms[sid]["buckets"][bkt] == 2 * n
+    assert fleet.sources == ["a", "b"]
+    view = fleet.fleet_view()
+    assert view["requests"] == 2 * a.counters[PREFIX + "requests_total"]
+
+
+def test_gauge_carries_timestamp_and_merges_last_writer_wins():
+    g = Gauge()
+    assert g.snapshot() == (float("-inf"), 0.0)
+    g.set(3.0, 7.0)
+    assert g.snapshot() == (3.0, 7.0)
+    old = TelemetrySnapshot(gauges={PREFIX + "queue_depth": [1.0, 9.0]})
+    new = TelemetrySnapshot(gauges={PREFIX + "queue_depth": [2.0, 4.0]})
+    assert merge_snapshots([old, new]).gauges[PREFIX + "queue_depth"] \
+        == [2.0, 4.0]                       # newest write wins, not largest
+    assert merge_snapshots([new, old]).gauges[PREFIX + "queue_depth"] \
+        == [2.0, 4.0]
+
+
+# -------------------------------------------------------- exposition format
+def _served_engine():
+    clock = FakeClock()
+    eng = make_engine(clock, tracer=Tracer(),
+                      slo={"rt": SLOTarget()})
+    session = eng.begin(strict=False, traffic_class="rt")
+    session.feed(make_workload(24, min_len=8, max_len=128, seed=3),
+                 flush=True)
+    session.drain()
+    return eng, clock
+
+
+def test_exposition_round_trips_through_the_parser():
+    eng, _ = _served_engine()
+    snap = eng.telemetry_snapshot()
+    text = render_openmetrics(snap)
+    assert text.endswith("# EOF\n")
+    values, types = parse_exposition(text)
+    # every captured counter survives the text round trip exactly
+    for sid, value in snap.counters.items():
+        assert values[sid] == pytest.approx(float(value))
+    assert types[PREFIX + "requests"] == "counter"
+    assert types[PREFIX + "latency_seconds"] == "histogram"
+    assert types[PREFIX + "queue_depth"] == "gauge"
+    assert types[PREFIX + "slo_burn_rate"] == "gauge"
+    # histogram closes with le="+Inf" == _count (validated by the parser,
+    # asserted here so a parser regression can't silently pass both)
+    inf = values[PREFIX + 'latency_seconds_bucket{le="+Inf"}']
+    assert inf == values[PREFIX + "latency_seconds_count"]
+
+
+def test_parser_rejects_malformed_expositions():
+    eng, _ = _served_engine()
+    text = eng.dump_metrics()
+    with pytest.raises(ValueError, match="EOF"):
+        parse_exposition(text.replace("# EOF\n", ""))
+    dup = text.replace("# EOF", f"{PREFIX}requests_total 1\n# EOF")
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_exposition(dup)
+    with pytest.raises(ValueError, match="bad sample"):
+        parse_exposition("what even is this\n# EOF")
+    with pytest.raises(ValueError, match="non-monotone"):
+        parse_exposition('# TYPE x histogram\nx_bucket{le="1"} 5\n'
+                         'x_bucket{le="2"} 3\n# EOF')
+
+
+def test_dump_metrics_writes_the_returned_text(tmp_path):
+    eng, _ = _served_engine()
+    out = tmp_path / "metrics.prom"
+    text = eng.dump_metrics(str(out))
+    assert out.read_text() == text
+    snap_path = tmp_path / "snap.json"
+    eng.dump_snapshot(str(snap_path), source="unit")
+    loaded = TelemetrySnapshot.load(str(snap_path))
+    assert loaded.sources == ["unit"]
+    assert loaded.counters == eng.telemetry_snapshot().counters
+
+
+# ------------------------------------------------------- SLO burn alerting
+def test_burn_rates_pure_function():
+    target = SLOTarget()
+    events = [(t, 1 if t >= 50 else 0) for t in range(60)]
+    long_b, short_b = burn_rates(events, 59.0, target, "latency")
+    # long window sees 10 bad of 59 in-window events; short sees all-bad
+    assert short_b == pytest.approx(1.0 / target.budget("latency"))
+    assert 0 < long_b < short_b
+    assert burn_rates([], 10.0, target, "latency") == (0.0, 0.0)
+
+
+def _overload_run():
+    clock = FakeClock()
+    tracer = Tracer()
+    eng = make_engine(
+        clock, tracer=tracer,
+        admission=WatermarkPolicy(high_watermark=1, shed=True),
+        slo={"interactive": SLOTarget()})
+    session = eng.begin(strict=False, traffic_class="interactive")
+    session.feed(reqs_of([16] * 40, seed=4), flush=True)
+    session.drain()
+    shed = session.take_failures()
+    return eng, tracer, clock, shed
+
+
+def test_overload_trace_alerts_deterministically():
+    """Same trace, same fake clock => byte-identical SLO state, exposition,
+    and ALERT instants — alert state only moves at request/shed events."""
+    runs = [_overload_run() for _ in range(2)]
+    slo_a, slo_b = (e.telemetry()["slo"] for e, _, _, _ in runs)
+    assert slo_a == slo_b
+    shed_sli = slo_a["interactive"]["shed"]
+    assert runs[0][3], "watermark shed nothing — no overload produced"
+    assert shed_sli["alerting"] and shed_sli["alerts"] == 1
+    assert shed_sli["burn_long"] >= 14.4 <= shed_sli["burn_short"]
+    text_a, text_b = (e.dump_metrics() for e, _, _, _ in runs)
+    assert text_a == text_b
+    values, _ = parse_exposition(text_a)
+    key = f'{PREFIX}slo_alerting{{sli="shed",traffic_class="interactive"}}'
+    assert values[key] == 1.0
+    traces = [e.dump_trace("/dev/null") for e, _, _, _ in runs]
+    alerts = [[ev for ev in doc["traceEvents"] if ev["name"] == "ALERT"]
+              for doc in traces]
+    assert alerts[0] and alerts[0] == alerts[1]
+    assert alerts[0][0]["args"]["sli"] == "shed"
+
+
+def test_slo_section_empty_without_config_and_latency_sli_counts():
+    eng = make_engine(FakeClock())
+    eng.submit(reqs_of([16] * 4))
+    assert eng.telemetry()["slo"] == {}
+    # fake clock => zero wall latency => every response is a good event
+    eng2 = make_engine(FakeClock(), slo={"rt": SLOTarget()})
+    s = eng2.begin(traffic_class="rt")
+    s.feed(reqs_of([16] * 8), flush=True)
+    s.drain()
+    lat = eng2.telemetry()["slo"]["rt"]["latency"]
+    assert lat["good"] == 8 and lat["bad"] == 0
+    assert not lat["alerting"] and lat["burn_long"] == 0.0
+
+
+# --------------------------------------------------------- live retry hints
+def test_retry_after_is_live_and_clamped():
+    clock = FakeClock()
+    eng = make_engine(clock)
+    assert eng.retry_after_s() == 0.02          # no signal yet: default
+    eng.submit(reqs_of([16] * 8))
+    w = eng.telemetry()["window"]
+    assert w["retry_after_s"] == eng.retry_after_s()
+    assert 1e-3 <= w["retry_after_s"] <= 5.0
+
+
+# ----------------------------------------------------- observation is inert
+def test_traced_exported_golden_workload_is_byte_identical():
+    """Tracing + SLO tracking + a metrics scrape + a snapshot capture must
+    not perturb the served results or the aggregate accounting."""
+    reqs = make_workload(40, min_len=8, max_len=128, seed=21)
+    eng = make_engine(tracer=Tracer(), slo={"golden": SLOTarget()})
+    got = eng.submit(reqs)
+    eng.dump_metrics()                          # scrape mid-assertion
+    eng.telemetry_snapshot(source="golden")
+    from test_continuous import _bank_totals, _digest
+    telem = eng.telemetry()
+    payload = {
+        "responses": [
+            {"backend": r.backend, "cycles": r.cycles,
+             "column_reads": r.column_reads,
+             "bucket_shape": list(r.bucket_shape),
+             "values": _digest(r.values), "indices": _digest(r.indices)}
+            for r in got],
+        "aggregate": {
+            "column_reads": telem["column_reads"],
+            "cycles_exact": telem["cycles_exact"],
+            "cycles_estimated": telem["cycles_estimated"],
+            "tiles": telem["scheduler"]["tiles"],
+            "bank_totals": list(_bank_totals(eng)),
+        },
+    }
+    assert json.loads(json.dumps(payload)) == json.loads(GOLDEN.read_text())
