@@ -101,6 +101,14 @@ def main(argv=None):
     ap.add_argument("--shed_overload", action="store_true",
                     help="shed (deterministically reject) arrivals over the "
                          "watermark instead of deferring them")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm seeded fault injection (docs/robustness.md): "
+                         "last bank dead, one stuck-at lane, one slow bank, "
+                         "--fault_rate transient errors; every response must "
+                         "still match the oracle via verified retry")
+    ap.add_argument("--fault_rate", type=float, default=0.05,
+                    help="per-execution transient fault probability under "
+                         "--chaos (default 0.05)")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     ap.add_argument("--trace", default="",
                     help="enable the flight recorder and write the Chrome "
@@ -136,6 +144,18 @@ def main(argv=None):
     if args.trace:
         from repro.obs import Tracer
         tracer = Tracer()
+    faults = None
+    if args.chaos is not None:
+        from repro.sortserve import FaultPlan
+        # standard chaos plan: one permanently dead bank (the last), one
+        # stuck-at-1 lane, one slow bank, seeded transient errors
+        faults = FaultPlan(
+            seed=args.chaos,
+            transient_rate=args.fault_rate,
+            dead_banks=(args.banks - 1,),
+            stuck_lanes=((0, 7, 1),),
+            slow_banks=((1 % args.banks, 4.0),),
+        )
     as_flag = {"auto": None, "on": True, "off": False}
     cfg = EngineConfig(
         tracer=tracer,
@@ -151,6 +171,7 @@ def main(argv=None):
         packed=not args.dense,
         adaptive_policy=not args.static_policy,
         admission=admission,
+        faults=faults,
     )
     engine = SortServeEngine(cfg)
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)
@@ -205,6 +226,14 @@ def main(argv=None):
                   f"{cont['shed']} shed  "
                   f"{cont['high_watermark_crossings']} watermark crossings  "
                   f"queued peak {cont['queued_peak']}")
+    if faults is not None:
+        ft = telem["fault"]
+        print(f"chaos: {ft['failures']} faulted executions  "
+              f"{ft['retries']} retries  {ft['fallbacks']} fallbacks  "
+              f"{ft['guard_failures']} guard catches  "
+              f"{ft['quarantines']} quarantines "
+              f"({ft['quarantined_now']} still out)  "
+              f"{ft['exhausted']} exhausted")
     if args.trace:
         doc = engine.dump_trace(args.trace)
         print(f"trace: {len(doc['traceEvents'])} events "
@@ -225,6 +254,11 @@ def main(argv=None):
     if args.smoke:
         assert mismatches == 0, f"{mismatches} responses differ from oracle"
         assert len(backends_used) >= 2, f"only {backends_used} used"
+        if faults is not None:
+            ft = telem["fault"]
+            assert ft["failures"] > 0, "chaos plan injected nothing"
+            assert ft["quarantines"] > 0, "no bank was ever quarantined"
+            print("CHAOS SMOKE OK")
         print("SMOKE OK")
     return 0 if mismatches == 0 else 1
 

@@ -356,6 +356,17 @@ def capture(engine, source: str | None = None,
         c[f"{PREFIX}sched_{name}_total"] = getattr(s, name)
     c[PREFIX + "sched_queue_wait_cycles_total"] = s.queue_wait_vt
     c[PREFIX + "sched_busy_bank_cycles_total"] = s.busy_bank_vt
+    c[PREFIX + "fault_failures_total"] = s.fault_failures
+    c[PREFIX + "fault_retries_total"] = s.retries
+    c[PREFIX + "fault_exhausted_total"] = s.fault_exhausted
+    c[PREFIX + "fault_guard_failures_total"] = \
+        engine._fault_agg["guard_failures"]
+    c[PREFIX + "fault_fallbacks_total"] = engine._fault_agg["fallbacks"]
+    health = engine._health.section()
+    c[PREFIX + "fault_quarantines_total"] = health["quarantines"]
+    c[PREFIX + "fault_reinstated_total"] = health["reinstated"]
+    snap.gauges[PREFIX + "quarantined_banks"] = \
+        [now, health["quarantined_now"]]
     c[PREFIX + "watermark_crossings_total"] = \
         getattr(sched.policy, "crossings", 0)
     for bank in engine.pool.banks:

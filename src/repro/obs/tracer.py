@@ -11,7 +11,11 @@ hardware cycles from the :class:`~repro.sortserve.scheduler
 placement, queue wait).  Scheduler events (ARRIVE / ADMIT / DEFER / SHED /
 EARLY / RETIRE) are emitted into the same stream via the scheduler's
 ``on_event`` hook, so a request's wall-clock story and its tile's
-event-clock story stay joined by construction.
+event-clock story stay joined by construction.  Fault-recovery events
+(RETRY / QUARANTINE / PROBE, emitted by the scheduler under
+``EngineConfig(faults=...)`` — see ``docs/robustness.md``) ride the same
+hook: unknown kinds render as instants on the scheduler-event track, so
+the recovery story of a retried tile sits inline with its admissions.
 
 Design constraints, in order:
 

@@ -22,18 +22,34 @@ up, turning the repo's sorting engines into a request-level service:
   * :mod:`engine`    — streaming sessions
     (``begin(traffic_class=...)/feed()/drain()``), the batch ``submit``
     wrapper, the bounded async front door (:class:`RetryAfter`
-    backpressure), and JSON telemetry (latency, column reads / cycles,
-    bucket hit rates, event-clock admission + overload stats).
+    backpressure + :class:`BackoffPolicy` client-side retry), and JSON
+    telemetry (latency, column reads / cycles, bucket hit rates,
+    event-clock admission + overload stats),
+  * :mod:`faults`    — seeded bank fault injection (:class:`FaultPlan`),
+    the result-verification guard, and the :class:`BankHealth`
+    quarantine/probation tracker behind ``EngineConfig(faults=...)``.
 """
 
 from .backends import BACKENDS, CostPolicy, resolve_backends, solve_numpy
 from .batcher import Batcher, Tile, pow2_bucket
 from .engine import (
     AsyncSortServe,
+    BackoffPolicy,
     EngineConfig,
     RetryAfter,
     SortServeEngine,
     SortSession,
+)
+from .faults import (
+    BankDeadError,
+    BankHealth,
+    CorruptResultError,
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    RecoveryPolicy,
+    TransientFaultError,
+    verify_tile_result,
 )
 from .request import OP_KINDS, SortRequest, SortResponse, encode_payload
 from .scheduler import (
@@ -48,12 +64,20 @@ __all__ = [
     "AdmissionPolicy",
     "AsyncSortServe",
     "BACKENDS",
+    "BackoffPolicy",
+    "BankDeadError",
+    "BankHealth",
     "BankPool",
     "Batcher",
     "ContinuousScheduler",
+    "CorruptResultError",
     "CostPolicy",
     "EngineConfig",
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
     "OP_KINDS",
+    "RecoveryPolicy",
     "RetryAfter",
     "ShedError",
     "SortRequest",
@@ -61,9 +85,11 @@ __all__ = [
     "SortServeEngine",
     "SortSession",
     "Tile",
+    "TransientFaultError",
     "WatermarkPolicy",
     "encode_payload",
     "pow2_bucket",
     "resolve_backends",
     "solve_numpy",
+    "verify_tile_result",
 ]

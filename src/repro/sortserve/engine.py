@@ -55,6 +55,7 @@ per-session slices of the same quantities come from
 from __future__ import annotations
 
 import copy
+import heapq
 import json
 import queue
 import threading
@@ -75,6 +76,13 @@ from .backends import (
     solve_numpy,
 )
 from .batcher import Batcher, Tile
+from .faults import (
+    BankHealth,
+    CorruptResultError,
+    FaultInjector,
+    RecoveryPolicy,
+    verify_tile_result,
+)
 from .request import SortRequest, SortResponse, decode_values
 from .scheduler import BankPool, ContinuousScheduler, ShedError
 from repro.obs.aggregate import TelemetrySnapshot, capture
@@ -83,8 +91,8 @@ from repro.obs.export import render_openmetrics
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.slo import SLOTracker
 
-__all__ = ["AsyncSortServe", "EngineConfig", "RetryAfter", "SortServeEngine",
-           "SortSession"]
+__all__ = ["AsyncSortServe", "BackoffPolicy", "EngineConfig", "RetryAfter",
+           "SortServeEngine", "SortSession"]
 
 
 class RetryAfter(RuntimeError):
@@ -129,6 +137,11 @@ class EngineConfig:
     slo: dict | None = None          # traffic-class -> repro.obs.SLOTarget:
                                      # burn-rate tracking behind
                                      # telemetry()["slo"]; None disables
+    faults: object | None = None     # repro.sortserve.faults.FaultPlan:
+                                     # seeded bank fault injection + verified
+                                     # retry/quarantine recovery; None (the
+                                     # default) keeps the execute path a
+                                     # strict no-op (golden byte-identical)
     backend_kwargs: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -194,12 +207,27 @@ class SortServeEngine:
         # transitions land as ALERT instants in the tracer event stream
         self._slo = (SLOTracker(self.config.slo)
                      if self.config.slo else None)
+        # fault layer (PR 8): the injector exists only when a plan is
+        # configured; the health tracker always exists (telemetry shape is
+        # fixed) but records nothing unless the injector is active, so the
+        # faults-off execute path stays byte-identical to the golden run
+        plan = self.config.faults
+        if plan is not None:
+            plan.validate_banks(self.config.banks)
+        self._injector = FaultInjector(plan) if plan is not None else None
+        self._health = BankHealth(
+            self.config.banks,
+            active=self._injector is not None and self._injector.active)
+        self._fault_agg = {"guard_failures": 0, "fallbacks": 0}
         # one persistent event-clock scheduler for the engine's lifetime;
         # the admission policy (if any) gates arrivals under overload
         self.scheduler = ContinuousScheduler(
             self.pool, policy=self.config.admission,
             on_event=(self._tracer.sched_event
-                      if self._tracer is not None else None))
+                      if self._tracer is not None else None),
+            health=self._health,
+            recovery=(plan.recovery if plan is not None
+                      else RecoveryPolicy()))
         # serializes sessions/submits over the shared scheduler + telemetry
         # (the async front door feeds from its collector thread)
         self._lock = threading.RLock()
@@ -295,6 +323,12 @@ class SortServeEngine:
             # is telemetry-visible, so it rolls back with everything else
             policy=(None if self.scheduler.policy is None
                     else copy.deepcopy(vars(self.scheduler.policy))),
+            # fault layer: quarantine/probation state, injector RNG + counts,
+            # and the engine's guard/fallback counters — a rolled-back batch
+            # must not leave banks quarantined or burn RNG draws
+            fault=(dict(self._fault_agg), self._health.snapshot(),
+                   None if self._injector is None
+                   else self._injector.snapshot()),
         )
 
     def _restore_state(self, snap: dict) -> None:
@@ -329,6 +363,11 @@ class SortServeEngine:
             state = vars(self.scheduler.policy)
             state.clear()
             state.update(snap["policy"])
+        fault_agg, health_snap, inj_snap = snap["fault"]
+        self._fault_agg = fault_agg
+        self._health.restore(health_snap)
+        if inj_snap is not None:
+            self._injector.restore(inj_snap)
 
     # ------------------------------------------------------------- sessions
     def begin(self, *, max_age_s: float | None = None, strict: bool = True,
@@ -393,12 +432,48 @@ class SortServeEngine:
             by_id = {resp.request_id: resp for resp in got}
             return [by_id[req.request_id] for req in requests]
 
+    def _fault_fallback(self, tile: Tile):
+        """First enabled backend outside the fault-target set that serves
+        the tile's op — the degradation ladder's software rung."""
+        for be in self.backends:
+            if be.name not in self._injector.plan.targets and \
+                    tile.op in be.ops:
+                return be
+        return None
+
     def _execute(self, tile: Tile,
                  traffic_class: str | None = None) -> TileResult:
         backend = self.policy.choose(tile, traffic_class=traffic_class)
+        inj = self._injector
+        faulty = (inj is not None and inj.active
+                  and backend.name in inj.plan.targets)
+        if (faulty and tile.hint is None
+                and tile.obs.get("fault_attempts", 0)
+                >= inj.plan.recovery.escalate_after):
+            # repeated in-memory failures: stop banging on the faulty
+            # engine and serve this tile from a software fallback
+            fb = self._fault_fallback(tile)
+            if fb is not None:
+                backend, faulty = fb, False
+                self._fault_agg["fallbacks"] += 1
         t0 = self._clock()
         result = backend.run(tile)
         t1 = self._clock()
+        if faulty:
+            # injection + verification guard, in virtual time, before any
+            # telemetry accounting: a faulted execution contributes nothing
+            # (the scheduler released its banks with no credit) and the
+            # FaultError takes the scheduler's retry path
+            corrupted = inj.inject(tile, result,
+                                   tile.obs.get("bank_ids", ()),
+                                   self.config.bank_width)
+            try:
+                verify_tile_result(tile, result)
+            except CorruptResultError as exc:
+                self._fault_agg["guard_failures"] += 1
+                exc.bank_ids = corrupted or tuple(
+                    tile.obs.get("bank_ids", ()))
+                raise
         result.meta["wall_s"] = t1 - t0
         warm = result.meta.get("exec_warm")     # None: backend has no cache
         if warm is not None:
@@ -591,6 +666,25 @@ class SortServeEngine:
             # happen at event time, never at render
             "slo": (self._slo.section(now)
                     if self._slo is not None else {}),
+            # fault injection + recovery (PR 8): fixed shape whether or not
+            # a FaultPlan is configured, every bank always present under
+            # per_bank — zeros and "healthy" on a faults-off engine
+            "fault": self._fault_section(),
+        }
+
+    def _fault_section(self) -> dict:
+        inj = self._injector
+        ss = self.scheduler.stats
+        return {
+            "enabled": bool(inj is not None and inj.active),
+            "injected": (dict(inj.injected) if inj is not None else
+                         {"transient": 0, "stuck": 0, "dead": 0, "slow": 0}),
+            "guard_failures": self._fault_agg["guard_failures"],
+            "fallbacks": self._fault_agg["fallbacks"],
+            "failures": ss.fault_failures,
+            "retries": ss.retries,
+            "exhausted": ss.fault_exhausted,
+            **self._health.section(),
         }
 
     def dump_telemetry(self, path: str) -> dict:
@@ -914,6 +1008,37 @@ class SortSession:
             }
 
 
+@dataclass(frozen=True)
+class BackoffPolicy:
+    """Deterministic capped exponential backoff for shed-request resubmits.
+
+    The front door's client-side retry policy: a request shed by the
+    engine's admission policy is automatically resubmitted ``delay_s(n)``
+    seconds later (on the front door's injectable clock), at most
+    ``max_attempts`` times, before its future finally resolves with
+    :class:`RetryAfter`.  ``delay_s`` is ``min(base_s * factor**(n-1),
+    cap_s)`` — no jitter, so a fake-clock test replays the identical
+    schedule.  This replaces ad-hoc single-retry isolation as the front
+    door's only recovery path: isolation handles co-bucketed execution
+    failures, backoff handles overload sheds."""
+
+    base_s: float = 0.01
+    factor: float = 2.0
+    cap_s: float = 1.0
+    max_attempts: int = 3
+
+    def __post_init__(self):
+        if self.base_s <= 0 or self.cap_s <= 0 or self.factor < 1.0:
+            raise ValueError("base_s/cap_s must be positive, factor >= 1")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff before resubmission number ``attempt`` (1-based)."""
+        return min(self.base_s * self.factor ** (max(attempt, 1) - 1),
+                   self.cap_s)
+
+
 class AsyncSortServe:
     """Streaming async front door: futures in, continuous admission out.
 
@@ -952,19 +1077,26 @@ class AsyncSortServe:
     def __init__(self, engine: SortServeEngine, max_batch: int = 64,
                  max_wait_ms: float = 2.0, *, clock=None,
                  max_inflight: int | None = None,
-                 traffic_class: str | None = None):
+                 traffic_class: str | None = None,
+                 retry_policy: BackoffPolicy | None = None):
         if max_inflight is not None and max_inflight < 1:
             raise ValueError("max_inflight must be >= 1 (or None: unbounded)")
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.max_inflight = max_inflight
+        self.retry_policy = retry_policy
         self._clock = clock if clock is not None else engine._clock
         self.session = engine.begin(max_age_s=self.max_wait_s, strict=False,
                                     traffic_class=traffic_class)
         self._q: queue.Queue = queue.Queue()
         self._pending: dict[int, tuple[SortRequest, Future]] = {}
         self._retried: set[int] = set()
+        # (due_t, seq, request, future, pending RetryAfter): shed requests
+        # awaiting their backoff resubmission; attempts counted per rid
+        self._retry_heap: list = []
+        self._retry_seq = 0
+        self._retry_attempts: dict[int, int] = {}
         self._lock = threading.Lock()
         self._inflight = 0              # accepted futures not yet resolved
         self.rejected = 0               # submits refused at the inflight cap
@@ -1056,6 +1188,7 @@ class AsyncSortServe:
             item = self._pending.pop(resp.request_id, None)
             if item is not None:
                 self._retried.discard(resp.request_id)
+                self._retry_attempts.pop(resp.request_id, None)
                 self._finish(item[1], resp)
         for req, exc, co_batched in self.session.take_failures():
             rid = req.request_id
@@ -1064,16 +1197,28 @@ class AsyncSortServe:
                 continue
             if isinstance(exc, ShedError):
                 # admission-policy backpressure: deterministic caller-visible
-                # deferral; a retry here would re-enter the overloaded queue.
-                # The hint is the engine's live drain-rate estimate of how
-                # long the queue ahead needs, not a fixed constant
+                # deferral — an immediate retry would re-enter the overloaded
+                # queue.  The hint is the engine's live drain-rate estimate
+                # of how long the queue ahead needs, not a fixed constant
                 self._pending.pop(rid)
                 self._retried.discard(rid)
                 retry = RetryAfter(
                     str(exc),
                     retry_after_s=self.engine.retry_after_s(self._clock()))
                 retry.__cause__ = exc
-                self._finish(item[1], exc=retry)
+                pol = self.retry_policy
+                attempts = self._retry_attempts.get(rid, 0)
+                if pol is not None and attempts < pol.max_attempts:
+                    # client-side backoff: resubmit after a deterministic
+                    # capped-exponential delay instead of failing the future
+                    self._retry_attempts[rid] = attempts + 1
+                    self._retry_seq += 1
+                    heapq.heappush(self._retry_heap, (
+                        self._clock() + pol.delay_s(attempts + 1),
+                        self._retry_seq, req, item[1], retry))
+                else:
+                    self._retry_attempts.pop(rid, None)
+                    self._finish(item[1], exc=retry)
             elif co_batched > 1 and rid not in self._retried:
                 # the failure may belong to a co-bucketed neighbour: retry
                 # in a private tile (isolate=True) so only the true
@@ -1084,15 +1229,37 @@ class AsyncSortServe:
             else:
                 self._pending.pop(rid)
                 self._retried.discard(rid)
+                self._retry_attempts.pop(rid, None)
                 self._finish(item[1], exc=exc)
 
+    def _flush_retries(self) -> None:
+        """Resubmit every backoff whose due instant has passed."""
+        now = self._clock()
+        while self._retry_heap and self._retry_heap[0][0] <= now:
+            _, _, req, fut, _ = heapq.heappop(self._retry_heap)
+            if not fut.cancelled():
+                self._feed_one(req, fut)
+            else:
+                with self._lock:
+                    self._inflight -= 1
+        # a resubmission may itself shed and re-enter the heap above; the
+        # next loop iteration's deadline accounts for it
+
+    def _next_retry_t(self) -> float | None:
+        return self._retry_heap[0][0] if self._retry_heap else None
+
     def _pump(self) -> None:
+        self._flush_retries()
         self._deliver(self.session.poll(self._clock()))
 
     def _loop(self) -> None:
         stop = False
         while not stop:
             deadline = self.session.next_deadline()
+            retry_t = self._next_retry_t()
+            if retry_t is not None:
+                deadline = retry_t if deadline is None \
+                    else min(deadline, retry_t)
             if deadline is None:
                 timeout = None                 # nothing aging: block for work
             else:
@@ -1139,6 +1306,12 @@ class AsyncSortServe:
                 with self._lock:
                     self._inflight -= 1
         self._deliver(self.session.drain())
+        # backoffs still pending at close resolve with their RetryAfter —
+        # the service is going away, so "come back later" is the truth
+        while self._retry_heap:
+            _, _, _, fut, retry = heapq.heappop(self._retry_heap)
+            self._finish(fut, exc=retry)
+        self._retry_attempts.clear()
         for rid, (req, fut) in list(self._pending.items()):
             self._pending.pop(rid)
             self._finish(fut, exc=RuntimeError(

@@ -72,6 +72,7 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from .batcher import Tile
+from .faults import FaultError, RecoveryPolicy
 
 __all__ = ["ACCEPT", "AdmissionPolicy", "BankPool", "ContinuousScheduler",
            "ContinuousStats", "DEFER", "LogicalBank", "SHED",
@@ -138,25 +139,34 @@ class BankPool:
         override this to name the device each bank is pinned to."""
         return [f"bank {b.index}" for b in self.banks]
 
-    def try_place(self, tile: Tile, tile_id: int) -> _Placement | None:
-        """Reserve a shard group for the tile, least-occupied banks first."""
+    def try_place(self, tile: Tile, tile_id: int,
+                  exclude: frozenset = frozenset()) -> _Placement | None:
+        """Reserve a shard group for the tile, least-occupied banks first.
+
+        ``exclude`` removes banks from eligibility (health quarantine): the
+        tile places — and, when wider than the survivors, waves — over the
+        remaining capacity only.  Empty (the default) is the byte-identical
+        pre-fault behaviour."""
         b_rows, n_cols = tile.shape
         shards = self.shards_for(n_cols)
         if b_rows > self.banks[0].bank_rows:
             return None                   # taller than any bank can ever hold
-        if shards > len(self.banks):
-            # oversized: only placeable into an idle pool, as wave execution
-            if all(b.free_rows == b.bank_rows for b in self.banks):
-                waves = -(-shards // len(self.banks))
-                for bank in self.banks:
+        avail = (self.banks if not exclude else
+                 [b for b in self.banks if b.index not in exclude])
+        if not avail:
+            return None                   # every bank quarantined right now
+        if shards > len(avail):
+            # oversized: only placeable into idle survivors, as wave execution
+            if all(b.free_rows == b.bank_rows for b in avail):
+                waves = -(-shards // len(avail))
+                for bank in avail:
                     bank.load(tile_id, b_rows)
-                tail = shards % len(self.banks) or len(self.banks)
-                return _Placement(tile, tile_id, [b.index for b in self.banks],
+                tail = shards % len(avail) or len(avail)
+                return _Placement(tile, tile_id, [b.index for b in avail],
                                   waves=waves,
-                                  tail_banks=[b.index for b in
-                                              self.banks[:tail]])
+                                  tail_banks=[b.index for b in avail[:tail]])
             return None
-        free = sorted((b for b in self.banks if b.free_rows >= b_rows),
+        free = sorted((b for b in avail if b.free_rows >= b_rows),
                       key=lambda b: (b.bank_rows - b.free_rows, b.index))
         if len(free) < shards:
             return None
@@ -344,6 +354,9 @@ class ContinuousStats(SchedulerStats):
     admissions: int = 0             # == tiles; kept for symmetry with queue
     events: int = 0                 # heap events processed
     exec_failures: int = 0          # failed tile executions (either mode)
+    fault_failures: int = 0         # FaultError executions (retried or not)
+    retries: int = 0                # fault re-arrivals scheduled (backoff)
+    fault_exhausted: int = 0        # tiles that ran out of fault retries
     queued_peak: int = 0
     deferred: int = 0               # admission-policy deferrals (re-arrivals)
     shed: int = 0                   # admission-policy rejections
@@ -366,6 +379,7 @@ class _Job:                             # from lists and compared by object
     owner: object                   # abort()/session scope token
     arrive_vt: float
     defers: int = 0                 # admission-policy deferrals so far
+    attempts: int = 0               # failed fault-retried executions so far
     cancelled: bool = False
 
 
@@ -411,13 +425,21 @@ class ContinuousScheduler:
 
     def __init__(self, pool: BankPool, *,
                  policy: AdmissionPolicy | None = None,
-                 on_event: Callable | None = None):
+                 on_event: Callable | None = None,
+                 health=None, recovery: RecoveryPolicy | None = None):
         self.pool = pool
         self.policy = policy
         # on_event(kind, tile, vt, **attrs) — the flight-recorder hook.
-        # kinds: arrive / defer / shed / admit / early / retire / exec_fail.
+        # kinds: arrive / defer / shed / admit / early / retire / exec_fail
+        # plus the fault-recovery instants retry / quarantine / probe.
         # None (the default) keeps the event loop observation-free.
         self.on_event = on_event
+        # bank-health tracker (repro.sortserve.faults.BankHealth) and the
+        # virtual-time retry schedule for FaultError executions.  An
+        # inactive (or absent) tracker keeps every fault hook on the
+        # zero-cost path — faults-off behaviour is byte-identical.
+        self.health = health
+        self.recovery = recovery if recovery is not None else RecoveryPolicy()
         self.stats = ContinuousStats()
         self.vt = 0.0                       # the event clock (virtual cycles)
         self._heap: list = []               # (t, seq, kind, payload)
@@ -510,17 +532,23 @@ class ContinuousScheduler:
 
     def _on_arrive(self, job: _Job) -> None:
         """One arrival event: admission-policy gate, then admit or queue."""
-        if job.defers == 0:                 # deferred re-arrivals count once
-            self.stats.arrivals += 1
+        if job.defers == 0 and job.attempts == 0:
+            self.stats.arrivals += 1        # deferred/retried count once
             job.arrive_vt = max(job.arrive_vt, self.vt)
             if self.on_event is not None:
                 self.on_event("arrive", job.tile, self.vt)
         action, retry = ACCEPT, 0.0
         if self.policy is not None:
             busy = sum(1 for b in self.pool.banks if b.loaded)
+            # watermarks recompute against *surviving* capacity: quarantined
+            # banks leave the occupancy denominator, so the same queue
+            # pressure trips backpressure earlier on a degraded pool
+            denom = len(self.pool.banks)
+            if self.health is not None and self.health.active:
+                denom = max(1, denom - len(self.health.ineligible(self.vt)))
             action, retry = self.policy.decide(
                 depth=len(self._queue),
-                occupancy=busy / len(self.pool.banks),
+                occupancy=busy / denom,
                 vt=self.vt, waited_vt=self.vt - job.arrive_vt,
                 defers=job.defers)
         if action == SHED:
@@ -551,8 +579,55 @@ class ContinuousScheduler:
                                          len(self._queue))
 
     # ----------------------------------------------------------- admission
+    def _release_unserved(self, pl: _Placement) -> None:
+        """Free a failed admission's banks with no telemetry credit."""
+        b_rows = pl.tile.shape[0]
+        for i in pl.bank_ids:
+            bank = self.pool.banks[i]
+            if pl.tile_id in bank.loaded:
+                bank.release(pl.tile_id, b_rows)
+
+    def _on_fault(self, job: _Job, pl: _Placement, exc: FaultError) -> bool:
+        """Recovery path for an injected-fault execution: charge health,
+        schedule a bounded virtual-time backoff re-arrival, or — retries
+        exhausted — fail the tile through the normal exec_fail contract.
+        The job is consumed either way (never left queued)."""
+        self.stats.fault_failures += 1
+        if self.health is not None and self.health.active:
+            blamed = list(exc.bank_ids) or list(pl.bank_ids)
+            for b in self.health.record_error(blamed, self.vt):
+                if self.on_event is not None:
+                    self.on_event("quarantine", job.tile, self.vt, bank=b,
+                                  error=type(exc).__name__,
+                                  release_vt=self.health.records[b].release_vt)
+        job.attempts += 1
+        job.tile.obs["fault_attempts"] = job.attempts
+        if job.attempts <= self.recovery.max_retries:
+            delay = self.recovery.delay_vt(job.attempts)
+            self.stats.retries += 1
+            if self.on_event is not None:
+                self.on_event("retry", job.tile, self.vt,
+                              attempt=job.attempts, delay_vt=delay,
+                              error=type(exc).__name__)
+            heapq.heappush(self._heap, (self.vt + delay, next(self._seq),
+                                        _ARRIVE, job))
+            return True                         # consumed; re-arrives later
+        self.stats.fault_exhausted += 1
+        self.stats.exec_failures += 1
+        if self.on_event is not None:
+            self.on_event("exec_fail", job.tile, self.vt,
+                          error=type(exc).__name__)
+        if job.sink is not None:
+            job.sink(job.tile, None, exc)
+        if job.strict:
+            raise exc
+        return True
+
     def _try_admit(self, job: _Job) -> bool:
-        pl = self.pool.try_place(job.tile, next(self._ids))
+        exclude = (self.health.ineligible(self.vt)
+                   if self.health is not None and self.health.active
+                   else frozenset())
+        pl = self.pool.try_place(job.tile, next(self._ids), exclude=exclude)
         if pl is None:
             return False
         self.stats.tiles += 1
@@ -568,14 +643,16 @@ class ContinuousScheduler:
             self.on_event("admit", job.tile, self.vt,
                           bank_ids=list(pl.bank_ids), waves=pl.waves,
                           queue_wait_vt=self.vt - job.arrive_vt)
+        # the executing layer (fault injection, bank-targeted attribution)
+        # needs to know which shard group this execution runs on
+        job.tile.obs["bank_ids"] = list(pl.bank_ids)
         try:
             result = job.execute(job.tile)
+        except FaultError as exc:
+            self._release_unserved(pl)
+            return self._on_fault(job, pl, exc)
         except BaseException as exc:
-            b_rows = job.tile.shape[0]
-            for i in pl.bank_ids:               # no telemetry credit
-                bank = self.pool.banks[i]
-                if pl.tile_id in bank.loaded:
-                    bank.release(pl.tile_id, b_rows)
+            self._release_unserved(pl)
             self.stats.exec_failures += 1
             if self.on_event is not None:
                 self.on_event("exec_fail", job.tile, self.vt,
@@ -588,10 +665,24 @@ class ContinuousScheduler:
             if job.strict:
                 raise
             return True                         # consumed, not re-queued
+        if self.health is not None and self.health.active:
+            probing, reinstated = self.health.record_ok(pl.bank_ids, self.vt)
+            if self.on_event is not None:
+                for b in probing:
+                    self.on_event("probe", job.tile, self.vt, bank=b,
+                                  reinstated=b in reinstated)
         cycles = getattr(result, "cycles", None)
         total = int(cycles.sum()) if cycles is not None else None
         dur = float(total) if total is not None else float(
             getattr(result, "estimated_cycles", None) or 0.0)
+        # a slow bank in the shard group stretches virtual service time;
+        # the cycle *credit* (total) is untouched, so bank-cycle
+        # conservation is arrival- and fault-order independent
+        meta = getattr(result, "meta", None)
+        if isinstance(meta, dict):
+            slow = meta.get("fault_slow_mult")
+            if slow is not None and float(slow) != 1.0:
+                dur *= float(slow)
         fl = _Flight(job, pl, result, total, dur, admit_vt=self.vt)
         self._inflight.append(fl)
         if pl.waves > 1 and pl.early_banks:
@@ -612,38 +703,57 @@ class ContinuousScheduler:
         event, so it admits as soon as its shard group frees; skip-scan
         behind it trades strict FIFO for bank utilization, the usual
         continuous-batching compromise."""
-        progress = True
-        while progress:
-            progress = False
-            i = 0
-            while i < len(self._queue):
-                job = self._queue[i]
-                if job.cancelled:
-                    self._queue.pop(i)
+        while True:
+            progress = True
+            while progress:
+                progress = False
+                i = 0
+                while i < len(self._queue):
+                    job = self._queue[i]
+                    if job.cancelled:
+                        self._queue.pop(i)
+                        continue
+                    try:
+                        admitted = self._try_admit(job)
+                    except BaseException:
+                        # a strict execute failure consumed the job (its sink
+                        # was told); leaving it queued would re-execute it on
+                        # the next pump
+                        self._queue.pop(i)
+                        raise
+                    if admitted:
+                        self._queue.pop(i)
+                        if mid_wave:
+                            self.stats.mid_wave_admissions += 1
+                        progress = True
+                        continue
+                    if self.pool.shards_for(job.tile.shape[1]) > \
+                            len(self.pool.banks):
+                        break                   # hold the door (see above)
+                    i += 1
+            # quarantine can stall the queue on an *idle* pool (survivors
+            # too few for the head).  With no pending event to call back,
+            # advance the clock to the earliest quarantine release — the
+            # bank re-enters on probation — and rescan; each pass either
+            # admits or strictly advances vt to a later release, so this
+            # terminates
+            if (self._queue and not self._heap
+                    and not self.pool.any_pending()
+                    and self.health is not None and self.health.active):
+                nxt = self.health.next_release_vt()
+                if nxt is not None:
+                    self.vt = max(self.vt, nxt)
                     continue
-                try:
-                    admitted = self._try_admit(job)
-                except BaseException:
-                    # a strict execute failure consumed the job (its sink
-                    # was told); leaving it queued would re-execute it on
-                    # the next pump
-                    self._queue.pop(i)
-                    raise
-                if admitted:
-                    self._queue.pop(i)
-                    if mid_wave:
-                        self.stats.mid_wave_admissions += 1
-                    progress = True
-                    continue
-                if self.pool.shards_for(job.tile.shape[1]) > \
-                        len(self.pool.banks):
-                    break                       # hold the door (see above)
-                i += 1
+            break
         # progress invariant: feed() rejects tiles taller than a bank, and
         # any feed-accepted tile places on a fully idle pool (oversized
-        # widths via the wave path) — so a stalled queue implies busy banks,
-        # i.e. a pending retire event that will call back here
-        assert not self._queue or self.pool.any_pending(), \
+        # widths via the wave path) — so a stalled queue implies busy banks
+        # (a pending retire event that will call back here), a pending heap
+        # event, or a quarantine release that the next heap-empty drain
+        # will fast-forward to
+        assert (not self._queue or self.pool.any_pending() or self._heap
+                or (self.health is not None
+                    and self.health.next_release_vt() is not None)), \
             "queue stalled on an idle pool despite feed-time validation"
 
     # ------------------------------------------------------------- control

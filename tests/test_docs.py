@@ -47,6 +47,8 @@ def flatten_keys(obj, prefix="") -> set[str]:
                 name = "<op>"
             elif prefix == "slo.":
                 name = "<class>"
+            elif prefix == "fault.per_bank.":
+                name = "<bank>"
             keys |= flatten_keys(v, f"{prefix}{name}.")
     elif isinstance(obj, list):
         for v in obj:
