@@ -24,6 +24,7 @@ SUITES = [
     "benchmarks.distserve_bench",
     "benchmarks.packed_bench",
     "benchmarks.streaming_bench",
+    "benchmarks.hw_bench",
 ]
 
 

@@ -1,0 +1,90 @@
+"""Emit a tuned-hardware profile for ``launch.sortserve --hw-profile``.
+
+Runs the :mod:`benchmarks.hw_bench` XLA flag sweep for the local device
+kind (each candidate set in a fresh interpreter — flags only bind at
+backend init), picks the fastest set, and writes a profile JSON:
+
+    {
+      "device_kind":   "...",            # jax device the sweep ran on
+      "platform":      "cpu|gpu|tpu",
+      "xla_flags":     ["--xla_...", ...],   # winning set + device count
+      "compile_cache": "/path" | null,   # persistent compilation cache
+      "priors":        [...],            # CostPolicy.load_priors rows
+      "calibration":   [...],            # CalibrationTable.seed_rows rows
+      "sweep":         [...]             # every candidate's measurement
+    }
+
+A serving process started as
+
+    PYTHONPATH=src python -m repro.launch.sortserve --smoke --mesh \\
+        --hw-profile hwprofile.json
+
+applies the flags before jax initializes, enables the compile cache, and
+seeds the routing policy and calibration table with the measured priors.
+
+    PYTHONPATH=src python scripts/hw_tune.py --out hwprofile.json \\
+        [--cache-dir /var/cache/colskip-xla] [--requests 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.hw_bench import DEV_COUNT, sweep_flags  # noqa: E402
+
+
+def build_profile(cache_dir: str | None, n_requests: int) -> dict:
+    swept = sweep_flags(n_requests=n_requests)
+    best = swept["best"]
+    if best is None:
+        raise SystemExit("hw_tune: every candidate flag set failed")
+    flags = [f"--xla_force_host_platform_device_count={DEV_COUNT}"] \
+        if swept["platform"] == "cpu" else []
+    return {
+        "device_kind": swept["device_kind"],
+        "platform": swept["platform"],
+        "xla_flags": flags + list(best["flags"]),
+        "compile_cache": cache_dir,
+        "priors": best["priors"],
+        "calibration": best["calibration"],
+        "sweep": [{k: v for k, v in e.items()
+                   if k in ("name", "flags", "us_per_tile", "ratio", "error")}
+                  for e in swept["results"]],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True, help="profile JSON path")
+    ap.add_argument("--cache-dir", default="", dest="cache_dir",
+                    help="persistent compilation-cache dir to bake into "
+                         "the profile (created on first use)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="workload size per candidate (wall-clock knob)")
+    args = ap.parse_args(argv)
+
+    prof = build_profile(args.cache_dir or None, args.requests)
+    with open(args.out, "w") as f:
+        json.dump(prof, f, indent=2)
+        f.write("\n")
+    best_name = next((e["name"] for e in prof["sweep"]
+                      if e.get("us_per_tile") is not None
+                      and list(e.get("flags", [])) ==
+                      prof["xla_flags"][1 if prof["platform"] == "cpu"
+                                        else 0:]), "?")
+    print(f"hw_tune: device_kind={prof['device_kind']} "
+          f"best={best_name} "
+          f"({len(prof['sweep'])} candidates, "
+          f"{len(prof['priors'])} priors, "
+          f"{len(prof['calibration'])} calibration rows) -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

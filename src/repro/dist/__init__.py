@@ -21,7 +21,7 @@ jax as well as on current releases.
 
 from . import _jaxcompat  # noqa: F401  (side effect: installs jax shims)
 
-from .compress import ef_topk_psum
+from .compress import ef_topk_psum, ef_topk_psum_auto
 from .sharding import act_specs, cache_spec, dp_axes, param_specs
 
 __all__ = [
@@ -29,5 +29,6 @@ __all__ = [
     "cache_spec",
     "dp_axes",
     "ef_topk_psum",
+    "ef_topk_psum_auto",
     "param_specs",
 ]

@@ -31,7 +31,37 @@ import functools
 
 import jax
 
-__all__ = ["install", "shard_map"]
+__all__ = ["enable_persistent_compilation_cache", "install", "shard_map"]
+
+
+def enable_persistent_compilation_cache(cache_dir, on_event=None) -> bool:
+    """Point jax's persistent compilation cache at ``cache_dir``.
+
+    Serving executors are small and fast to compile, so the stock entry
+    thresholds would skip all of them — both floors are dropped to "cache
+    everything" (best effort; absent knobs on older jax are ignored).
+    ``on_event`` (if given) is registered on the jax monitoring stream and
+    receives ``/jax/compilation_cache/cache_hits`` / ``cache_misses`` event
+    names, one per lookup.  Returns False when this jax has no persistent
+    cache (the feature degrades to a no-op, never an error).
+    """
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    except Exception:
+        return False
+    for knob, val in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                      ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(knob, val)
+        except Exception:
+            pass
+    if on_event is not None:
+        try:
+            from jax._src import monitoring
+            monitoring.register_event_listener(on_event)
+        except Exception:
+            pass        # cache still works, only the hit/miss split is lost
+    return True
 
 
 def _compat_shard_map(f=None, mesh=None, in_specs=None, out_specs=None, *,

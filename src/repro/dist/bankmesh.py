@@ -56,18 +56,75 @@ from repro.sortserve.scheduler import BankPool
 
 from ._jaxcompat import shard_map
 
-__all__ = ["MeshBankPool", "colskip_sort_mesh", "make_bank_mesh",
-           "sharded_tile_fn"]
+__all__ = ["MeshBankPool", "collective_rounds", "colskip_sort_mesh",
+           "make_bank_mesh", "sharded_tile_fn", "topology_fingerprint"]
 
 
-def make_bank_mesh(devices=None, axis_name: str = "banks"):
-    """One-axis mesh over the given (default: all) devices."""
+def make_bank_mesh(devices=None, axis_name: str = "banks", *,
+                   hosts: int = 1, host_axis: str = "hosts"):
+    """Bank mesh over the given (default: all) devices.
+
+    ``hosts=1`` (the default) builds the classic one-axis ``banks`` mesh.
+    ``hosts>1`` builds the hierarchical 2-axis topology — a DCN ``hosts``
+    axis over ICI ``banks`` shard groups — used by the multi-host serving
+    path; the §IV manager gates then reduce over *both* axes (jax accepts
+    axis-name tuples), so a tile's columns shard over every device of the
+    2-D mesh while the predicate/drain semantics stay identical.
+    """
     devs = list(devices if devices is not None else jax.devices())
-    return jax.make_mesh((len(devs),), (axis_name,), devices=devs)
+    if hosts <= 1:
+        return jax.make_mesh((len(devs),), (axis_name,), devices=devs)
+    if len(devs) % hosts:
+        raise ValueError(f"{len(devs)} devices not divisible over "
+                         f"{hosts} hosts")
+    return jax.make_mesh((hosts, len(devs) // hosts),
+                         (host_axis, axis_name), devices=devs)
 
 
-def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str,
-                        packed: bool = True):
+def topology_fingerprint(mesh) -> tuple:
+    """Hashable identity of a mesh's *topology* rather than its object.
+
+    Two meshes built over the same devices in the same arrangement — e.g.
+    rebuilt after a fleet restart, or constructed independently by backend
+    and pool — fingerprint equal, so executor/jit caches keyed on the
+    fingerprint never double-compile them.  Captures axis names and sizes,
+    the device platform/kind, and the participating process count (the
+    DCN-vs-ICI split); everything the lowered executable's collectives
+    actually specialize on.
+    """
+    devs = list(mesh.devices.flat)
+    d0 = devs[0]
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            getattr(d0, "platform", "?"), getattr(d0, "device_kind", "?"),
+            len({getattr(d, "process_index", 0) for d in devs}),
+            tuple(getattr(d, "id", i) for i, d in enumerate(devs)))
+
+
+def _axes_tuple(axis_name) -> tuple:
+    return tuple(axis_name) if isinstance(axis_name, (tuple, list)) \
+        else (axis_name,)
+
+
+def collective_rounds(w: int, stop: int, fuse: int = 1) -> dict:
+    """Static per-tile manager-round accounting for the mesh hot path.
+
+    Per §IV iteration: one SL-gate round (load), ``ceil(w / fuse)``
+    traverse rounds (each fused block is a single psum), and one drain
+    ``all_gather``; plus the 2 assembly psums per tile.  ``planes`` is the
+    plane-traversal count the unfused path would pay one round each for —
+    ``rounds / planes`` is the mesh-side CR analogue the ``collectives``
+    telemetry family reports.
+    """
+    blocks = -(-w // fuse)
+    return {
+        "rounds": stop * (blocks + 2) + 2,
+        "unfused_rounds": stop * (w + 2) + 2,
+        "planes": stop * w,
+    }
+
+
+def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name,
+                        packed: bool = True, fuse: int = 1):
     """Per-bank body of the sharded sort (called inside ``shard_map``).
 
     ``u_local``: (TB, N_local) — this bank's column shard of the tile.  The
@@ -82,28 +139,32 @@ def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str,
 
     u = u_local.astype(jnp.uint32)
     tb, n_loc = u.shape
-    nbanks = jax.lax.psum(1, axis_name)            # concrete: axis size
-    bank = jax.lax.axis_index(axis_name)
+    axes = _axes_tuple(axis_name)      # ("banks",) or ("hosts", "banks")
+    nbanks = jax.lax.psum(1, axes)                 # concrete: total banks
+    bank = jax.lax.axis_index(axes)                # flat row-major index
     stop = min(stop, n_loc * nbanks)
 
     def or_any(local_bits):
-        """Manager OR-gate: psum of stacked predicate bits, one collective
-        per bit plane (both saw-a-1/saw-a-0 bits ride the same psum)."""
-        return jax.lax.psum(local_bits.astype(jnp.int32), axis_name) > 0
+        """Manager OR-gate: psum of stacked predicate bits — one collective
+        per fused plane block (every branch's saw-a-1/saw-a-0 bits ride the
+        same psum), reduced over the whole hosts x banks topology."""
+        return jax.lax.psum(local_bits.astype(jnp.int32), axes) > 0
 
     def drain_counts(m_local):
         """Bank-major drain: every bank learns all survivor counts via one
-        all_gather and takes its exclusive prefix."""
-        m_all = jax.lax.all_gather(m_local, axis_name)             # (C, TB)
+        all_gather and takes its exclusive prefix (gather order over the
+        flattened axes matches the flat ``axis_index`` above)."""
+        m_all = jax.lax.all_gather(m_local, axes)                  # (C, TB)
         before = jnp.where(jnp.arange(nbanks)[:, None] < bank,
                            m_all, 0).sum(0)                        # (TB,)
         return m_all.sum(0), before
 
     # the machine's mask carriers may be lane-packed; the manager gates above
     # see only predicate stacks and survivor counts either way, so the psum
-    # pattern (one collective per bit plane) is representation-invariant
+    # pattern (one collective per fused block) is representation-invariant
     sorted_mask, out_pos, crs, drains = colskip_machine(
-        u, w, k, stop, or_any=or_any, drain_counts=drain_counts, packed=packed)
+        u, w, k, stop, or_any=or_any, drain_counts=drain_counts,
+        packed=packed, fuse=fuse)
 
     # output select: each bank scatters its drained rows into the global
     # (TB, stop) result; a psum assembles + broadcasts it (zeros elsewhere)
@@ -115,49 +176,77 @@ def _colskip_tile_local(u_local, *, w: int, k: int, stop: int, axis_name: str,
         cols, mode="drop")
     vals_l = jnp.zeros((tb, stop), jnp.uint32).at[rows, pos].set(
         u, mode="drop")
-    order = jax.lax.psum(order_l, axis_name)
-    vals = jax.lax.psum(vals_l, axis_name)
+    order = jax.lax.psum(order_l, axes)
+    vals = jax.lax.psum(vals_l, axes)
     return vals, order, crs, crs + drains
 
 
-@functools.lru_cache(maxsize=None)
-def sharded_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int,
-                    packed: bool):
+# keyed on topology_fingerprint(mesh) — NOT the mesh object — so two equal
+# meshes (e.g. rebuilt after a fleet restart, or built independently by the
+# backend and the pool) share one traced/compiled function
+_SHARDED_FNS: dict = {}
+_COMPILED_FNS: dict = {}
+
+
+def _fn_key(mesh, axis_name, w, k, stop, packed, fuse):
+    return (topology_fingerprint(mesh), _axes_tuple(axis_name),
+            w, k, stop, packed, fuse)
+
+
+def sharded_tile_fn(mesh, axis_name, w: int, k: int, stop: int,
+                    packed: bool, fuse: int = 1):
     """The un-jitted shard-mapped tile body — callers pick how to compile
     it (plain ``jax.jit`` here; the sortserve backend AOT-compiles it into
-    its executor cache so cold mesh tiles are visible as cache misses)."""
-    fn = functools.partial(_colskip_tile_local, w=w, k=k, stop=stop,
-                           axis_name=axis_name, packed=packed)
-    return shard_map(fn, mesh=mesh, in_specs=P(None, axis_name),
-                     out_specs=(P(), P(), P(), P()))
+    its executor cache so cold mesh tiles are visible as cache misses).
+    ``axis_name`` may be one axis or a tuple (the 2-axis hosts topology)."""
+    key = _fn_key(mesh, axis_name, w, k, stop, packed, fuse)
+    fn = _SHARDED_FNS.get(key)
+    if fn is None:
+        axes = _axes_tuple(axis_name)
+        body = functools.partial(_colskip_tile_local, w=w, k=k, stop=stop,
+                                 axis_name=axes, packed=packed, fuse=fuse)
+        fn = shard_map(body, mesh=mesh, in_specs=P(None, axes),
+                       out_specs=(P(), P(), P(), P()))
+        _SHARDED_FNS[key] = fn
+    return fn
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_tile_fn(mesh, axis_name: str, w: int, k: int, stop: int,
-                      packed: bool):
-    return jax.jit(sharded_tile_fn(mesh, axis_name, w, k, stop, packed))
+def _compiled_tile_fn(mesh, axis_name, w: int, k: int, stop: int,
+                      packed: bool, fuse: int = 1):
+    key = _fn_key(mesh, axis_name, w, k, stop, packed, fuse)
+    fn = _COMPILED_FNS.get(key)
+    if fn is None:
+        fn = jax.jit(sharded_tile_fn(mesh, axis_name, w, k, stop, packed,
+                                     fuse))
+        _COMPILED_FNS[key] = fn
+    return fn
 
 
 def colskip_sort_mesh(x, mesh, *, w: int = 32, k: int = 2,
-                      axis_name: str = "banks",
+                      axis_name="banks",
                       stop_after: int | None = None,
-                      packed: bool = True):
+                      packed: bool = True, fuse: int = 1):
     """Sort rows of ``x`` (B, N) uint32 over the mesh's ``axis_name`` banks.
 
     Bit-identical to :func:`repro.kernels.colskip.colskip_sort_batched`
     (values, order, and CR/cycle telemetry) — §V.C's invariance of column
     skipping under multi-bank management, realized with collectives.  N must
-    divide evenly over the axis; callers fall back to one bank otherwise.
-    ``packed`` selects the lane-packed mask carrier inside each bank.
+    divide evenly over the axis (the product of sizes when ``axis_name`` is
+    the 2-axis hosts tuple); callers fall back to one bank otherwise.
+    ``packed`` selects the lane-packed mask carrier inside each bank;
+    ``fuse`` batches that many bit planes per manager round (results are
+    fuse-invariant, only ``collectives.rounds`` changes).
     """
     b, n = x.shape
-    nbanks = mesh.shape[axis_name]
+    nbanks = 1
+    for a in _axes_tuple(axis_name):
+        nbanks *= mesh.shape[a]
     if n % nbanks:
         raise ValueError(f"N={n} not divisible over {nbanks} mesh banks")
     stop = n if stop_after is None else min(int(stop_after), n)
     if stop < 1:
         raise ValueError(f"stop_after={stop_after} must be >= 1")
-    fn = _compiled_tile_fn(mesh, axis_name, w, k, stop, packed)
+    fn = _compiled_tile_fn(mesh, axis_name, w, k, stop, packed, fuse)
     return fn(jnp.asarray(x, jnp.uint32))
 
 
@@ -176,14 +265,21 @@ class MeshBankPool(BankPool):
     """
 
     def __init__(self, banks: int = 8, bank_width: int = 1024,
-                 bank_rows: int = 8, devices=None, axis_name: str = "banks"):
+                 bank_rows: int = 8, devices=None, axis_name: str = "banks",
+                 hosts: int = 1, host_axis: str = "hosts"):
         super().__init__(banks, bank_width, bank_rows)
-        self.axis_name = axis_name
-        self.mesh = make_bank_mesh(devices, axis_name)
+        self.mesh = make_bank_mesh(devices, axis_name, hosts=hosts,
+                                   host_axis=host_axis)
+        # the axis spec backends shard over: one name, or the 2-axis tuple
+        # when the pool spans a DCN hosts axis
+        self.axis_name = (host_axis, axis_name) if hosts > 1 else axis_name
 
     @property
     def n_devices(self) -> int:
-        return self.mesh.shape[self.axis_name]
+        n = 1
+        for a in _axes_tuple(self.axis_name):
+            n *= self.mesh.shape[a]
+        return n
 
     def bank_labels(self) -> list[str]:
         """Trace-export track names carrying the device each logical bank

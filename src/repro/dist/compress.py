@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.distsort import topk_mask_sharded
 
-__all__ = ["ef_topk_psum", "ef_topk_psum_tree"]
+__all__ = ["ef_topk_psum", "ef_topk_psum_auto", "ef_topk_psum_tree"]
 
 
 def ef_topk_psum(grad: jax.Array, err: jax.Array, *, ratio: float | None = None,
@@ -58,6 +58,46 @@ def ef_topk_psum(grad: jax.Array, err: jax.Array, *, ratio: float | None = None,
     mask = topk_mask_sharded(jnp.abs(c), k, axis_name)
     selected = jnp.where(mask, c, jnp.zeros_like(c))
     return jax.lax.psum(selected, axis_name), c - selected
+
+
+def ef_topk_psum_auto(grad: jax.Array, err: jax.Array, *, base_ratio: float,
+                      max_ratio: float = 1.0, axis_name: str = "data"):
+    """:func:`ef_topk_psum` with a gradient-energy-scheduled ratio.
+
+    The compression ratio autotunes per call from the global energy balance
+    of residual vs fresh gradient:
+
+        r = clip(base_ratio * (1 + E_err / E_grad), base_ratio, max_ratio)
+
+    When error feedback is keeping up (small residual) the ratio stays at
+    ``base_ratio``; when the residual's energy builds — the signature of
+    over-aggressive compression — the ratio opens up proportionally so the
+    backlog flushes instead of compounding.  Both energies are global (one
+    extra ``psum`` of a stacked pair), so every rank schedules the same
+    ratio; with leading batch axes the schedule is per-batch.  The selected
+    count ``k`` is traced (the §IV k-th-largest search takes a dynamic
+    ``need`` count), so the schedule costs no recompile.
+
+    At ``base_ratio=1.0`` the schedule is pinned at 1.0 and selection is
+    total: the reduced result divided by the axis size equals ``pmean``
+    exactly and the new residual is zero (unit-tested).
+
+    Returns ``(reduced, new_err, ratio_used)``.
+    """
+    if not 0.0 < base_ratio <= max_ratio <= 1.0:
+        raise ValueError(f"need 0 < base_ratio <= max_ratio <= 1, got "
+                         f"{base_ratio}/{max_ratio}")
+    c = grad + err
+    n_ranks = jax.lax.psum(1, axis_name)           # concrete: axis size
+    n_global = c.shape[-1] * n_ranks
+    e = jax.lax.psum(jnp.stack([(grad * grad).sum(-1),
+                                (err * err).sum(-1)]), axis_name)
+    boost = e[1] / jnp.maximum(e[0], jnp.finfo(e.dtype).tiny)
+    r = jnp.clip(base_ratio * (1.0 + boost), base_ratio, max_ratio)
+    k = jnp.clip(jnp.round(r * n_global).astype(jnp.int32), 1, n_global)
+    mask = topk_mask_sharded(jnp.abs(c), k, axis_name)
+    selected = jnp.where(mask, c, jnp.zeros_like(c))
+    return jax.lax.psum(selected, axis_name), c - selected, r
 
 
 def ef_topk_psum_tree(grads, errs, *, ratio: float, axis_name: str = "data"):

@@ -52,7 +52,8 @@ from repro.core.bitmatrix import (
 
 
 def colskip_machine(u, w: int, k: int, stop: int, *,
-                    or_any=None, drain_counts=None, packed: bool = True):
+                    or_any=None, drain_counts=None, packed: bool = True,
+                    fuse: int = 1):
     """Batched §III state machine, parameterized over the bank gates.
 
     ``u`` is one bank's (TB, N_local) column shard (the whole tile when run
@@ -69,6 +70,11 @@ def colskip_machine(u, w: int, k: int, stop: int, *,
     The gates see only small predicate stacks and survivor counts, so the
     same collectives serve the packed and dense carriers unchanged.
 
+    ``fuse`` batches up to that many consecutive bit planes' predicate
+    pairs into a single ``or_any`` round (the speculative tree of
+    :func:`_traverse_planes`); results are bit-identical for any fuse, only
+    the number of manager rounds changes.
+
     Returns ``(sorted_mask, out_pos, crs, drains)`` — local masks/positions
     plus replicated telemetry; callers assemble values/order from them.
     """
@@ -76,12 +82,85 @@ def colskip_machine(u, w: int, k: int, stop: int, *,
         or_any = lambda bits: bits
     if drain_counts is None:
         drain_counts = lambda m: (m, jnp.zeros_like(m))
+    if not 1 <= fuse <= 8:
+        raise ValueError(f"fuse={fuse} out of range [1, 8]")
     if packed:
-        return _machine_packed(u, w, k, stop, or_any, drain_counts)
-    return _machine_dense(u, w, k, stop, or_any, drain_counts)
+        return _machine_packed(u, w, k, stop, or_any, drain_counts, fuse)
+    return _machine_dense(u, w, k, stop, or_any, drain_counts, fuse)
 
 
-def _machine_packed(u, w: int, k: int, stop: int, or_any, drain_counts):
+def _traverse_planes(alive, start, fresh, t_sigs, t_masks, t_valid, s_top,
+                     crs, *, w, k, tb, fuse, or_any, anyfn, col_at):
+    """Shared §III plane traversal for both mask carriers.
+
+    ``anyfn`` reduces one mask to a per-row saw-a-bit predicate and
+    ``col_at(sig)`` fetches the bit-``sig`` column in the carrier's
+    representation — the only two points where packed and dense differ.
+
+    Planes are walked in blocks of ``fuse``.  Within a block, plane ``i``'s
+    saw-a-1/saw-a-0 pair is precomputed under every combination of the
+    block's earlier mixed-column verdicts — a speculative tree of
+    ``2^fuse - 1`` predicate pairs — so the whole block consumes ONE
+    manager OR round instead of ``fuse``.  Verdicts then resolve locally,
+    plane by plane, each one selecting the branch its successors read their
+    precomputed pair from.  The tree enumerates every reachable alive mask
+    exactly, so results are bit-identical for any ``fuse`` (property-tested
+    in tests/test_bankmesh.py); ``fuse=1`` degenerates to the classic
+    one-round-per-plane walk with an identical collective payload.
+    """
+    start = jnp.where(start == -2, s_top, start)          # fresh rows
+    nblocks = -(-w // fuse)
+
+    def block(bi, carry):
+        alive, sigs, masks, valid, s_top, seen, crs = carry
+        sig0 = jnp.int32(w - 1) - bi * fuse
+        # ghost planes of a partial last block fetch plane 0 (clamped) and
+        # are discarded by the sig >= 0 guard in the verdict below
+        cols = [col_at(jnp.maximum(sig0 - i, 0)) for i in range(fuse)]
+        # speculative tree: branch index b over planes < i, bit j of b set
+        # when plane j's verdict is hypothesized mixed
+        hyps = [alive]
+        pairs = []
+        for i in range(fuse):
+            for h in hyps:
+                # (~col's tail bits are 1 but alive's are always 0)
+                pairs.append(anyfn(cols[i] & h))
+                pairs.append(anyfn(~cols[i] & h))
+            if i + 1 < fuse:
+                hyps = hyps + [h & ~cols[i] for h in hyps]
+        anyb = or_any(jnp.stack(pairs, -1))    # (TB, 2*(2^fuse - 1))
+        branch = jnp.zeros((tb,), jnp.int32)
+        for i in range(fuse):
+            sig = sig0 - i
+            active = (sig >= 0) & (sig <= start)           # (TB,)
+            idx = (2 * ((1 << i) - 1) + 2 * branch)[:, None]
+            p1 = jnp.take_along_axis(anyb, idx, 1)[:, 0]
+            p0 = jnp.take_along_axis(anyb, idx + 1, 1)[:, 0]
+            mixed = active & p1 & p0                       # (TB,)
+            branch = branch | (mixed.astype(jnp.int32) << i)
+            new_alive = jnp.where(mixed[:, None], alive & ~cols[i], alive)
+            rec = (mixed & fresh)[:, None] if k > 0 else jnp.zeros((tb, 1), bool)
+            # push (sig, mask) entry: shift table toward older slots
+            sigs = jnp.where(rec, jnp.concatenate(
+                [jnp.full((tb, 1), sig), sigs[:, :-1]], 1), sigs)
+            masks = jnp.where(rec[:, :, None], jnp.concatenate(
+                [new_alive[:, None, :], masks[:, :-1]], 1), masks)
+            valid = jnp.where(rec, jnp.concatenate(
+                [jnp.ones((tb, 1), bool), valid[:, :-1]], 1), valid)
+            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
+            seen = seen | (mixed & fresh)
+            crs = crs + active.astype(jnp.int32)
+            alive = new_alive
+        return alive, sigs, masks, valid, s_top, seen, crs
+
+    init = (alive, t_sigs, t_masks, t_valid, s_top,
+            jnp.zeros((tb,), bool), crs)
+    out = jax.lax.fori_loop(0, nblocks, block, init)
+    return out[0], out[1], out[2], out[3], out[4], out[6]
+
+
+def _machine_packed(u, w: int, k: int, stop: int, or_any, drain_counts,
+                    fuse: int = 1):
     """Lane-packed machine body — masks travel as uint32 words."""
     tb, n_loc = u.shape
     kk = max(1, k)
@@ -106,36 +185,11 @@ def _machine_packed(u, w: int, k: int, stop: int, or_any, drain_counts):
         return alive, start, ~exists, valid
 
     def traverse(alive, start, fresh, t_sigs, t_masks, t_valid, s_top, crs):
-        start = jnp.where(start == -2, s_top, start)          # fresh rows
-
-        def step(j, carry):
-            alive, sigs, masks, valid, s_top, seen, crs = carry
-            sig = jnp.int32(w - 1 - j)
-            active = sig <= start                              # (TB,)
-            col = planes[w - 1 - j]                            # CR: (TB, W)
-            # mixed-column judgement: both predicate bits through one gate
-            # (~col's tail bits are 1 but alive's are always 0)
-            anyb = or_any(jnp.stack([any_lane(col & alive),
-                                     any_lane(~col & alive)], -1))
-            mixed = active & anyb[:, 0] & anyb[:, 1]           # (TB,)
-            new_alive = jnp.where(mixed[:, None], alive & ~col, alive)
-            rec = (mixed & fresh)[:, None] if k > 0 else jnp.zeros((tb, 1), bool)
-            # push (sig, mask) entry: shift table toward older slots
-            sigs = jnp.where(rec, jnp.concatenate(
-                [jnp.full((tb, 1), sig), sigs[:, :-1]], 1), sigs)
-            masks = jnp.where(rec[:, :, None], jnp.concatenate(
-                [new_alive[:, None, :], masks[:, :-1]], 1), masks)
-            valid = jnp.where(rec, jnp.concatenate(
-                [jnp.ones((tb, 1), bool), valid[:, :-1]], 1), valid)
-            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
-            seen = seen | (mixed & fresh)
-            crs = crs + active.astype(jnp.int32)
-            return new_alive, sigs, masks, valid, s_top, seen, crs
-
-        init = (alive, t_sigs, t_masks, t_valid, s_top,
-                jnp.zeros((tb,), bool), crs)
-        out = jax.lax.fori_loop(0, w, step, init)
-        return out[0], out[1], out[2], out[3], out[4], out[6]
+        # CR per active plane; column read = word fetch from planes
+        return _traverse_planes(
+            alive, start, fresh, t_sigs, t_masks, t_valid, s_top, crs,
+            w=w, k=k, tb=tb, fuse=fuse, or_any=or_any, anyfn=any_lane,
+            col_at=lambda s: planes[s])
 
     def body(i, st):
         sorted_w, sigs, masks, valid, s_top, out_pos, count, crs, drains = st
@@ -172,7 +226,8 @@ def _machine_packed(u, w: int, k: int, stop: int, or_any, drain_counts):
     return unpack_rows(sorted_w, n_loc), out_pos, crs, drains
 
 
-def _machine_dense(u, w: int, k: int, stop: int, or_any, drain_counts):
+def _machine_dense(u, w: int, k: int, stop: int, or_any, drain_counts,
+                   fuse: int = 1):
     """Dense boolean machine body — the pre-packing equivalence baseline."""
     tb, n_loc = u.shape
     kk = max(1, k)
@@ -194,35 +249,12 @@ def _machine_dense(u, w: int, k: int, stop: int, or_any, drain_counts):
         return alive, start, ~exists, valid
 
     def traverse(alive, start, fresh, t_sigs, t_masks, t_valid, s_top, crs):
-        start = jnp.where(start == -2, s_top, start)          # fresh rows
-
-        def step(j, carry):
-            alive, sigs, masks, valid, s_top, seen, crs = carry
-            sig = jnp.int32(w - 1 - j)
-            active = sig <= start                              # (TB,)
-            col = ((u >> jnp.uint32(sig)) & 1).astype(bool)    # (TB, Nl)
-            # mixed-column judgement: both predicate bits through one gate
-            anyb = or_any(jnp.stack([(col & alive).any(-1),
-                                     (~col & alive).any(-1)], -1))
-            mixed = active & anyb[:, 0] & anyb[:, 1]           # (TB,)
-            new_alive = jnp.where(mixed[:, None], alive & ~col, alive)
-            rec = (mixed & fresh)[:, None] if k > 0 else jnp.zeros((tb, 1), bool)
-            # push (sig, mask) entry: shift table toward older slots
-            sigs = jnp.where(rec, jnp.concatenate(
-                [jnp.full((tb, 1), sig), sigs[:, :-1]], 1), sigs)
-            masks = jnp.where(rec[:, :, None], jnp.concatenate(
-                [new_alive[:, None, :], masks[:, :-1]], 1), masks)
-            valid = jnp.where(rec, jnp.concatenate(
-                [jnp.ones((tb, 1), bool), valid[:, :-1]], 1), valid)
-            s_top = jnp.where(mixed & fresh & ~seen, sig, s_top)
-            seen = seen | (mixed & fresh)
-            crs = crs + active.astype(jnp.int32)
-            return new_alive, sigs, masks, valid, s_top, seen, crs
-
-        init = (alive, t_sigs, t_masks, t_valid, s_top,
-                jnp.zeros((tb,), bool), crs)
-        out = jax.lax.fori_loop(0, w, step, init)
-        return out[0], out[1], out[2], out[3], out[4], out[6]
+        # CR per active plane; column read = shift-and-mask of the tile
+        return _traverse_planes(
+            alive, start, fresh, t_sigs, t_masks, t_valid, s_top, crs,
+            w=w, k=k, tb=tb, fuse=fuse, or_any=or_any,
+            anyfn=lambda m: m.any(-1),
+            col_at=lambda s: ((u >> s.astype(jnp.uint32)) & 1).astype(bool))
 
     def body(i, st):
         sorted_mask, sigs, masks, valid, s_top, out_pos, count, crs, drains = st

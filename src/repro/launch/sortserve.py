@@ -64,6 +64,29 @@ def check_against_oracle(req: SortRequest, resp) -> bool:
     return True
 
 
+def apply_hw_profile(path: str) -> dict:
+    """Load a ``scripts/hw_tune.py`` tuned-hardware profile.
+
+    The profile's XLA flags are appended to ``XLA_FLAGS`` *now*, before the
+    engine forces jax backend initialization — flags only take effect if
+    the backend is still uninitialized, which is why the launcher applies
+    the profile first thing after argument parsing.  The returned dict also
+    carries ``compile_cache`` (persistent compilation-cache dir),
+    ``priors`` (:meth:`CostPolicy.load_priors` rows) and ``calibration``
+    (:meth:`CalibrationTable.seed_rows` rows) for the caller to wire up.
+    """
+    import os
+    with open(path) as f:
+        prof = json.load(f)
+    flags = list(prof.get("xla_flags", []))
+    current = os.environ.get("XLA_FLAGS", "")
+    missing = [fl for fl in flags if fl not in current]
+    if missing:
+        os.environ["XLA_FLAGS"] = " ".join(([current] if current else [])
+                                           + missing)
+    return prof
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -77,6 +100,20 @@ def main(argv=None):
                     help="serve through the mesh-sharded bank pool "
                          "(repro.dist.bankmesh): shard groups execute on jax "
                          "devices, colskip tiles via the colskip_mesh backend")
+    ap.add_argument("--mesh_hosts", type=int, default=1,
+                    help="with --mesh: fold devices into a hierarchical "
+                         "hosts x banks 2-axis mesh (DCN over ICI)")
+    ap.add_argument("--fuse", type=int, default=1,
+                    help="bit planes fused per manager OR round on the mesh "
+                         "path (1-8); results are fuse-invariant, only "
+                         "collectives.rounds changes")
+    ap.add_argument("--compile-cache", default="", dest="compile_cache",
+                    help="persistent jax compilation-cache directory: AOT "
+                         "executables compiled once survive process restarts")
+    ap.add_argument("--hw-profile", default="", dest="hw_profile",
+                    help="tuned-hardware profile JSON from scripts/hw_tune.py "
+                         "(XLA flags + compile cache + routing/calibration "
+                         "priors)")
     ap.add_argument("--tile_rows", type=int, default=8)
     ap.add_argument("--banks", type=int, default=8)
     ap.add_argument("--bank_width", type=int, default=1024)
@@ -122,7 +159,19 @@ def main(argv=None):
                          "repro.obs.merge_snapshots)")
     args = ap.parse_args(argv)
 
+    # the profile must land before anything forces jax backend init: its
+    # XLA flags (e.g. --xla_force_host_platform_device_count) are read once
+    profile = apply_hw_profile(args.hw_profile) if args.hw_profile else None
+    compile_cache = args.compile_cache or (
+        profile.get("compile_cache") if profile else None) or None
+
     backends = tuple(s for s in args.backends.split(",") if s)
+    if args.mesh_hosts > 1 and not args.mesh:
+        ap.error("--mesh_hosts needs --mesh (the hosts axis shards the "
+                 "mesh bank pool)")
+    if args.fuse > 1 and not args.mesh:
+        ap.error("--fuse needs --mesh (plane fusion batches the mesh "
+                 "manager's OR rounds; the local engine has no collectives)")
     if args.mesh:
         if args.use_pallas != "auto" or args.interpret != "auto":
             ap.error("--use_pallas/--interpret apply to the local colskip "
@@ -166,6 +215,9 @@ def main(argv=None):
         bank_rows=max(args.tile_rows, 8),
         sim_width_cap=args.sim_width_cap,
         mesh=args.mesh,
+        mesh_hosts=args.mesh_hosts,
+        fuse=args.fuse,
+        compile_cache=compile_cache,
         use_pallas=as_flag[args.use_pallas],
         interpret=as_flag[args.interpret],
         packed=not args.dense,
@@ -174,6 +226,13 @@ def main(argv=None):
         faults=faults,
     )
     engine = SortServeEngine(cfg)
+    if profile:
+        n_pri = engine.policy.load_priors(profile.get("priors", []))
+        n_cal = engine._calib.seed_rows(profile.get("calibration", []))
+        print(f"hw profile: {args.hw_profile} "
+              f"(device_kind={profile.get('device_kind', '?')}, "
+              f"{len(profile.get('xla_flags', []))} xla flags, "
+              f"{n_pri} routing priors, {n_cal} calibration rows)")
     reqs = make_workload(args.requests, args.min_len, args.max_len, args.seed)
 
     t0 = time.time()
@@ -211,6 +270,15 @@ def main(argv=None):
     print(f"executor cache: {telem['executor_cache']['hits']} hits / "
           f"{telem['executor_cache']['misses']} compiles "
           f"(hit-rate {telem['executor_cache']['hit_rate']:.2f})")
+    coll = telem.get("collectives", {})
+    if args.mesh and coll.get("rounds"):
+        print(f"collectives: {coll['rounds']} rounds / {coll['planes']} "
+              f"planes (round CR {coll['round_cr']:.2f}x, fuse={args.fuse})  "
+              f"prefetch {coll['prefetch_hits']}/{coll['prefetch_staged']}")
+    if compile_cache:
+        ec = telem["executor_cache"]
+        print(f"persistent cache: {ec['persistent_hits']} hits / "
+              f"{ec['persistent_misses']} misses -> {compile_cache}")
     print(f"scheduler drains: {telem['scheduler']['drains']}  "
           f"oversized waves: {telem['scheduler']['oversized_waves']}  "
           f"mid-wave admissions: {telem['scheduler']['mid_wave_admissions']}")

@@ -335,6 +335,16 @@ def capture(engine, source: str | None = None,
     c[PREFIX + "result_cache_misses_total"] = agg["cache_misses"]
     for key in ("hits", "misses", "prewarmed"):
         c[f"{PREFIX}executor_cache_{key}_total"] = engine._exec_stats[key]
+    # process-global split (same scope as the live executor_cache section);
+    # imported here because sortserve.engine imports this module at load
+    from repro.sortserve.backends import EXECUTOR_CACHE
+    p_hits, p_misses = EXECUTOR_CACHE.persistent_counters()
+    c[PREFIX + "executor_cache_persistent_hits_total"] = p_hits
+    c[PREFIX + "executor_cache_persistent_misses_total"] = p_misses
+    coll = agg["collectives"]
+    for key in ("rounds", "planes", "unfused_rounds", "prefetch_staged",
+                "prefetch_hits"):
+        c[f"{PREFIX}collectives_{key}_total"] = coll[key]
     c[PREFIX + "shed_requests_total"] = m.shed.all_time
     c[PREFIX + "failed_requests_total"] = m.failed.all_time
     for backend, pb in sorted(agg["per_backend"].items()):

@@ -70,6 +70,39 @@ class CalibrationTable:
             }
         return out
 
+    def profile_rows(self) -> list[dict]:
+        """Flat JSON rows for a tuned-hardware profile.
+
+        ``scripts/hw_tune.py`` embeds these under the profile's
+        ``calibration`` key; a serving process started with
+        ``--hw-profile`` feeds them back through :meth:`seed_rows` so the
+        measured-vs-modeled table opens with the bench harness's priors
+        instead of empty cells."""
+        rows = []
+        for (backend, width), (tiles, wall, cyc) in sorted(self._sums.items()):
+            modeled_s = cyc / self.clock_hz
+            rows.append({
+                "backend": backend, "width": int(width), "tiles": tiles,
+                "wall_s": wall, "modeled_cycles": cyc,
+                "ratio": wall / modeled_s if modeled_s > 0 else 0.0,
+            })
+        return rows
+
+    def seed_rows(self, rows) -> int:
+        """Warm-start from :meth:`profile_rows` output.
+
+        Cells this process has already measured live are left alone — a
+        fresh probe outranks a shipped prior.  Returns rows applied."""
+        applied = 0
+        for row in rows:
+            key = (str(row["backend"]), int(row["width"]))
+            if key in self._sums or float(row.get("modeled_cycles", 0)) <= 0:
+                continue
+            self._sums[key] = [int(row["tiles"]), float(row["wall_s"]),
+                               float(row["modeled_cycles"])]
+            applied += 1
+        return applied
+
     def snapshot(self) -> dict:
         return {k: list(v) for k, v in self._sums.items()}
 

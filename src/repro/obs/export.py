@@ -61,9 +61,20 @@ def _fmt(value) -> str:
     return repr(f)
 
 
+# series ids repeat scrape over scrape (bounded by banks/backends/ops),
+# so the sid -> family map is memoized module-wide; this is on the
+# export-overhead gate's hot path (benchmarks/streaming_bench)
+_FAMILY_CACHE: dict = {}
+
+
 def _family(sid: str) -> str:
-    name = sid.partition("{")[0]
-    return name[:-len("_total")] if name.endswith("_total") else name
+    fam = _FAMILY_CACHE.get(sid)
+    if fam is None:
+        name = sid.partition("{")[0]
+        fam = name[:-len("_total")] if name.endswith("_total") else name
+        if len(_FAMILY_CACHE) < 4096:
+            _FAMILY_CACHE[sid] = fam
+    return fam
 
 
 def _inner(labels: dict) -> str:

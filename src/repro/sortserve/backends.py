@@ -85,6 +85,43 @@ class ExecutorCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        # the persistent layer underneath: an in-process miss that jax's
+        # persistent compilation cache serves from disk is a deserialization,
+        # not a compile — the split feeds executor_cache telemetry
+        self.persistent_hits = 0
+        self.persistent_misses = 0
+        self.persistent_dir: str | None = None
+        self._listener_installed = False
+
+    def enable_persistent(self, cache_dir) -> bool:
+        """Wire the JAX persistent compilation cache under this cache.
+
+        Every AOT build (``jit().lower().compile()``) then writes its
+        serialized executable to ``cache_dir``; a fresh process pointed at
+        the same directory deserializes instead of compiling, so warm
+        starts survive restarts.  Returns True when the cache (and its
+        hit/miss event stream) is active on this jax.  Idempotent —
+        re-enabling only repoints the directory."""
+        from repro.dist._jaxcompat import enable_persistent_compilation_cache
+        listener = None if self._listener_installed else self._on_cache_event
+        ok = enable_persistent_compilation_cache(cache_dir, listener)
+        if ok:
+            self._listener_installed = True
+            self.persistent_dir = str(cache_dir)
+        return ok
+
+    def _on_cache_event(self, event, **kw):
+        # jax monitoring stream: one event per compilation-cache lookup
+        if event == "/jax/compilation_cache/cache_hits":
+            with self._lock:
+                self.persistent_hits += 1
+        elif event == "/jax/compilation_cache/cache_misses":
+            with self._lock:
+                self.persistent_misses += 1
+
+    def persistent_counters(self) -> tuple[int, int]:
+        with self._lock:
+            return self.persistent_hits, self.persistent_misses
 
     def get(self, key, build):
         """Return ``(executor, warm)`` for ``key``, compiling on miss.
@@ -330,36 +367,96 @@ class ShardedColskipBackend(Backend):
     ops = frozenset(("sort", "argsort", "kmin"))
 
     def __init__(self, w: int = 32, state_k: int = 2, mesh=None,
-                 axis_name: str = "banks", packed: bool = True):
-        from repro.dist.bankmesh import make_bank_mesh
+                 axis_name="banks", packed: bool = True, fuse: int = 1):
+        from repro.dist.bankmesh import make_bank_mesh, topology_fingerprint
         self.w = w
         self.state_k = state_k
         self.axis_name = axis_name
         self.packed = packed
+        self.fuse = fuse
         self.mesh = mesh if mesh is not None else make_bank_mesh(
             axis_name=axis_name)
+        # executor keys carry the topology fingerprint, NOT the mesh object:
+        # an equal mesh rebuilt after a restart must hit, not recompile
+        self._fingerprint = topology_fingerprint(self.mesh)
+        # double buffer: id(tile) -> (tile, device array) staged by
+        # prefetch() while the previous tile traverses planes.  Two slots,
+        # FIFO-evicted: admitting tile X stages its successor Y before X
+        # executes, so X's own staged entry must survive one more staging
+        self._staged: dict = {}
 
-    def run(self, tile: Tile) -> TileResult:
+    def _axes(self) -> tuple:
+        return (tuple(self.axis_name)
+                if isinstance(self.axis_name, (tuple, list))
+                else (self.axis_name,))
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for a in self._axes():
+            n *= self.mesh.shape[a]
+        return n
+
+    def _mesh_key(self, b: int, n: int, stop_eff: int) -> tuple:
+        return ("colskip_mesh", b, n, self.w, self.state_k, stop_eff,
+                self.packed, self.fuse, self._axes(), self._fingerprint)
+
+    def _mesh_executor(self, b: int, n: int, stop_eff: int):
         import jax
         import jax.numpy as jnp
 
         from repro.dist.bankmesh import sharded_tile_fn
+        # AOT-compiled through the executor cache (like the local
+        # backends), so a cold mesh tile is visible as a cache miss —
+        # the engine's warm-only EMA gate depends on that
+        return EXECUTOR_CACHE.get(self._mesh_key(b, n, stop_eff),
+                                  lambda: _aot_compile(
+            sharded_tile_fn(self.mesh, self.axis_name, self.w,
+                            self.state_k, stop_eff, self.packed, self.fuse),
+            jax.ShapeDtypeStruct((b, n), jnp.uint32)))
+
+    def prefetch(self, tile: Tile) -> bool:
+        """Stage the next tile's device transfer (double buffering).
+
+        Called by the scheduler right before the current tile executes:
+        ``jnp.asarray`` dispatches the host->device copy asynchronously, so
+        the next tile's column shard lands while the current tile traverses
+        planes.  The staged array is exactly what :meth:`run` would build —
+        the compiled call path is unchanged.  Two slots, oldest evicted;
+        restaging a tile refreshes it.  Returns True when a transfer was
+        staged."""
+        import jax.numpy as jnp
+        n = tile.data.shape[1]
+        if n % self.n_devices != 0 or self.n_devices <= 1:
+            return False                 # one-bank fallback: nothing to hide
+        self._staged.pop(id(tile), None)
+        self._staged[id(tile)] = (tile, jnp.asarray(tile.data, jnp.uint32))
+        while len(self._staged) > 2:
+            del self._staged[next(iter(self._staged))]
+        return True
+
+    def run(self, tile: Tile) -> TileResult:
+        import jax.numpy as jnp
+
+        from repro.dist.bankmesh import collective_rounds
         b, n = tile.data.shape
-        n_dev = self.mesh.shape[self.axis_name]
+        n_dev = self.n_devices
         stop = tile.k if tile.op == "kmin" else None
+        staged = self._staged.pop(id(tile), None)
+        # the identity re-check guards id() reuse after a staged tile died
+        prefetch_hit = staged is not None and staged[0] is tile
+        coll = {"coll_rounds": 0, "coll_planes": 0, "coll_unfused_rounds": 0}
         if n % n_dev == 0 and n_dev > 1:
-            # AOT-compiled through the executor cache (like the local
-            # backends), so a cold mesh tile is visible as a cache miss —
-            # the engine's warm-only EMA gate depends on that
             stop_eff = min(stop, n) if stop is not None else n
-            key = ("colskip_mesh", b, n, self.w, self.state_k, stop_eff,
-                   self.packed, self.axis_name, self.mesh)
-            fn, warm = EXECUTOR_CACHE.get(key, lambda: _aot_compile(
-                sharded_tile_fn(self.mesh, self.axis_name, self.w,
-                                self.state_k, stop_eff, self.packed),
-                jax.ShapeDtypeStruct((b, n), jnp.uint32)))
-            vals, order, crs, cycles = fn(jnp.asarray(tile.data, jnp.uint32))
+            fn, warm = self._mesh_executor(b, n, stop_eff)
+            arr = staged[1] if prefetch_hit else jnp.asarray(tile.data,
+                                                             jnp.uint32)
+            vals, order, crs, cycles = fn(arr)
             banks_used = n_dev
+            rounds = collective_rounds(self.w, stop_eff, self.fuse)
+            coll = {"coll_rounds": rounds["rounds"],
+                    "coll_planes": rounds["planes"],
+                    "coll_unfused_rounds": rounds["unfused_rounds"]}
         else:
             fn, warm = _compiled_colskip(b, n, self.w, self.state_k, stop,
                                          False, None, self.packed)
@@ -370,23 +467,15 @@ class ShardedColskipBackend(Backend):
                           np.asarray(cycles, np.int64), self.name,
                           meta={"w": self.w, "state_k": self.state_k,
                                 "stop_after": stop, "mesh_banks": banks_used,
-                                "packed": self.packed, "exec_warm": warm})
+                                "packed": self.packed, "exec_warm": warm,
+                                "fuse": self.fuse,
+                                "prefetch_hit": prefetch_hit, **coll})
 
     def warm(self, b: int, n: int, op: str, k: int | None) -> bool:
-        import jax
-        import jax.numpy as jnp
-
-        from repro.dist.bankmesh import sharded_tile_fn
-        n_dev = self.mesh.shape[self.axis_name]
         stop = k if op == "kmin" else None
-        if n % n_dev == 0 and n_dev > 1:
+        if n % self.n_devices == 0 and self.n_devices > 1:
             stop_eff = min(stop, n) if stop is not None else n
-            key = ("colskip_mesh", b, n, self.w, self.state_k, stop_eff,
-                   self.packed, self.axis_name, self.mesh)
-            _, hit = EXECUTOR_CACHE.get(key, lambda: _aot_compile(
-                sharded_tile_fn(self.mesh, self.axis_name, self.w,
-                                self.state_k, stop_eff, self.packed),
-                jax.ShapeDtypeStruct((b, n), jnp.uint32)))
+            _, hit = self._mesh_executor(b, n, stop_eff)
         else:
             _, hit = _compiled_colskip(b, n, self.w, self.state_k, stop,
                                        False, None, self.packed)
@@ -556,6 +645,37 @@ class CostPolicy:
             self._ema[key] = per_row if prev is None else (
                 (1.0 - self.ema_alpha) * prev + self.ema_alpha * per_row)
             self._obs[key] = self._obs.get(key, 0) + 1
+
+    def export_priors(self) -> list[dict]:
+        """The engine-global measured EMAs as a portable profile (the
+        ``priors`` block of an hw_tune profile) — class-private EMAs are
+        deliberately excluded, they describe one session's traffic."""
+        out = []
+        for key in sorted(self._ema, key=repr):
+            backend, op, n, k, cls = key
+            if cls is not None:
+                continue
+            out.append({"backend": backend, "op": op, "n": n, "k": k,
+                        "s_per_row": self._ema[key],
+                        "samples": self._obs.get(key, 0)})
+        return out
+
+    def load_priors(self, priors) -> int:
+        """Seed the global EMA from a measured profile
+        (``scripts/hw_tune.py``).  Live measurements outrank the profile:
+        a signature that already has samples is left alone, and every
+        loaded prior keeps updating from real traffic through
+        :meth:`observe`.  Returns the number of signatures seeded."""
+        count = 0
+        for p in priors:
+            key = (p["backend"], p["op"], int(p["n"]),
+                   None if p.get("k") is None else int(p["k"]), None)
+            if key in self._ema:
+                continue
+            self._ema[key] = float(p["s_per_row"])
+            self._obs[key] = max(1, int(p.get("samples", 1)))
+            count += 1
+        return count
 
     def measured_s_per_row(self, backend_name: str, op: str, n: int,
                            k: int | None = None,

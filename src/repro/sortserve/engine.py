@@ -122,6 +122,12 @@ class EngineConfig:
     sim_width_cap: int = 2048       # width prior for the cycle-exact sim
     verify: bool = False            # cross-check every response vs the oracle
     mesh: bool = False              # MeshBankPool: shard groups on devices
+    mesh_hosts: int = 1             # >1: hierarchical 2-axis hosts x banks
+                                    # mesh (DCN over ICI shard groups)
+    fuse: int = 1                   # bit planes per fused manager round on
+                                    # the mesh path (results fuse-invariant)
+    compile_cache: str | None = None  # persistent jax compilation-cache dir
+                                      # under the executor cache; None off
     cache_size: int = 1024          # result-cache entries (0 disables)
     use_pallas: bool | None = None  # colskip engine: Pallas kernel vs ref
     interpret: bool | None = None   # Pallas interpret mode (None = auto)
@@ -155,6 +161,13 @@ class EngineConfig:
                 "use_pallas/interpret apply to the local colskip engine "
                 "only; the mesh backend is shard_map-jitted (drop the flags "
                 "or drop mesh=True)")
+        if not 1 <= self.fuse <= 8:
+            raise ValueError(f"fuse={self.fuse} out of range [1, 8]")
+        if self.mesh_hosts < 1:
+            raise ValueError(f"mesh_hosts={self.mesh_hosts} must be >= 1")
+        if self.mesh_hosts > 1 and not self.mesh:
+            raise ValueError("mesh_hosts > 1 needs mesh=True (the hosts "
+                             "axis only exists on the mesh pool)")
 
 
 class SortServeEngine:
@@ -180,13 +193,20 @@ class SortServeEngine:
             kwargs[sim].setdefault("packed", self.config.packed)
         kwargs["colskip"].setdefault("use_pallas", self.config.use_pallas)
         kwargs["colskip"].setdefault("interpret", self.config.interpret)
+        if self.config.compile_cache:
+            # persistent compilation cache under the executor cache: every
+            # AOT build below lands on disk, and a fresh process pointed at
+            # the same directory deserializes instead of compiling
+            EXECUTOR_CACHE.enable_persistent(self.config.compile_cache)
         if self.config.mesh:
             from repro.dist.bankmesh import MeshBankPool
             self.pool = MeshBankPool(self.config.banks, self.config.bank_width,
-                                     self.config.bank_rows)
+                                     self.config.bank_rows,
+                                     hosts=self.config.mesh_hosts)
             # the mesh backend executes on the pool's own device mesh
             kwargs["colskip_mesh"].setdefault("mesh", self.pool.mesh)
             kwargs["colskip_mesh"].setdefault("axis_name", self.pool.axis_name)
+            kwargs["colskip_mesh"].setdefault("fuse", self.config.fuse)
         else:
             self.pool = BankPool(self.config.banks, self.config.bank_width,
                                  self.config.bank_rows)
@@ -227,7 +247,8 @@ class SortServeEngine:
                       if self._tracer is not None else None),
             health=self._health,
             recovery=(plan.recovery if plan is not None
-                      else RecoveryPolicy()))
+                      else RecoveryPolicy()),
+            prefetch=self._prefetch_tile)
         # serializes sessions/submits over the shared scheduler + telemetry
         # (the async front door feeds from its collector thread)
         self._lock = threading.RLock()
@@ -249,6 +270,12 @@ class SortServeEngine:
             "cycles_estimated": 0.0, "verify_failures": 0,
             "cache_hits": 0, "cache_misses": 0,
             "per_backend": {}, "per_op": {}, "modeled_hw": {},
+            # mesh collective-round accounting (§IV manager rounds; the
+            # mesh-side CR analogue): fixed shape, zeros off the mesh path.
+            # Living inside _agg puts it under submit's all-or-nothing
+            # snapshot/rollback for free.
+            "collectives": {"rounds": 0, "planes": 0, "unfused_rounds": 0,
+                            "prefetch_staged": 0, "prefetch_hits": 0},
         }
 
     # -------------------------------------------------------------- cache
@@ -441,6 +468,21 @@ class SortServeEngine:
                 return be
         return None
 
+    def _prefetch_tile(self, tile: Tile) -> None:
+        """Scheduler double-buffer hook: stage the next queued tile's device
+        transfer on the backend that will (most likely) execute it, so the
+        host->device copy overlaps the current tile's plane traversal.
+        Best-effort — routing may differ at execute time, and a stale slot
+        is simply unused; only backends with a ``prefetch`` method (the
+        mesh backend) participate."""
+        try:
+            backend = self.policy.choose(tile)
+        except (KeyError, ValueError):
+            return                      # unroutable here; execute will raise
+        pf = getattr(backend, "prefetch", None)
+        if pf is not None and pf(tile):
+            self._agg["collectives"]["prefetch_staged"] += 1
+
     def _execute(self, tile: Tile,
                  traffic_class: str | None = None) -> TileResult:
         backend = self.policy.choose(tile, traffic_class=traffic_class)
@@ -518,6 +560,15 @@ class SortServeEngine:
             self._agg["cycles_exact"] += int(result.cycles.sum())
         if result.estimated_cycles is not None:
             self._agg["cycles_estimated"] += float(result.estimated_cycles)
+        # mesh collective rounds (zero off the mesh path): issued vs the
+        # one-psum-per-plane baseline vs planes traversed — the mesh CR
+        coll = self._agg["collectives"]
+        coll["rounds"] += int(result.meta.get("coll_rounds", 0))
+        coll["planes"] += int(result.meta.get("coll_planes", 0))
+        coll["unfused_rounds"] += int(result.meta.get("coll_unfused_rounds",
+                                                      0))
+        if result.meta.get("prefetch_hit"):
+            coll["prefetch_hits"] += 1
         n = tile.shape[1]
         if str(n) not in self._agg["modeled_hw"]:   # compute once per width
             self._agg["modeled_hw"][str(n)] = \
@@ -598,10 +649,15 @@ class SortServeEngine:
 
     def _executor_cache_stats(self) -> dict:
         hits, misses = self._exec_stats["hits"], self._exec_stats["misses"]
+        # the persistent split is process-global (like "size"): disk lookups
+        # happen inside jax's compile path, below per-engine attribution
+        p_hits, p_misses = EXECUTOR_CACHE.persistent_counters()
         return {"hits": hits, "misses": misses,
                 "prewarmed": self._exec_stats["prewarmed"],
                 "hit_rate": hits / max(1, hits + misses),
-                "size": EXECUTOR_CACHE.counters()[2]}
+                "size": EXECUTOR_CACHE.counters()[2],
+                "persistent_hits": p_hits,
+                "persistent_misses": p_misses}
 
     def telemetry(self) -> dict:
         now = self._clock()
@@ -653,6 +709,10 @@ class SortServeEngine:
                 "distinct_signatures": len(bs.signatures),
             },
             "scheduler": self.scheduler.telemetry(),
+            # §IV manager rounds on the mesh path (zeros elsewhere):
+            # round_cr is the fused-round reduction factor vs the
+            # one-psum-per-plane baseline — the mesh-side CR analogue
+            "collectives": self._collectives_section(),
             "modeled_hw_throughput_num_per_s": dict(self._agg["modeled_hw"]),
             # sliding-window live signals (the fleet router's placement
             # input) and the per-(backend, width) measured-vs-modeled table
@@ -671,6 +731,11 @@ class SortServeEngine:
             # per_bank — zeros and "healthy" on a faults-off engine
             "fault": self._fault_section(),
         }
+
+    def _collectives_section(self) -> dict:
+        c = self._agg["collectives"]
+        return {**c, "round_cr": (c["unfused_rounds"] / c["rounds"]
+                                  if c["rounds"] else 0.0)}
 
     def _fault_section(self) -> dict:
         inj = self._injector

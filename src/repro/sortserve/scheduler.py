@@ -426,9 +426,16 @@ class ContinuousScheduler:
     def __init__(self, pool: BankPool, *,
                  policy: AdmissionPolicy | None = None,
                  on_event: Callable | None = None,
-                 health=None, recovery: RecoveryPolicy | None = None):
+                 health=None, recovery: RecoveryPolicy | None = None,
+                 prefetch: Callable | None = None):
         self.pool = pool
         self.policy = policy
+        # prefetch(tile) — double-buffer hook, called with the next queued
+        # tile right before the current admission executes, so a backend
+        # can overlap the next transfer with the current compute.  Must be
+        # side-effect-free on scheduler state (no stats are recorded here —
+        # mesh and local pools keep identical scheduler telemetry).
+        self.prefetch = prefetch
         # on_event(kind, tile, vt, **attrs) — the flight-recorder hook.
         # kinds: arrive / defer / shed / admit / early / retire / exec_fail
         # plus the fault-recovery instants retry / quarantine / probe.
@@ -646,6 +653,14 @@ class ContinuousScheduler:
         # the executing layer (fault injection, bank-targeted attribution)
         # needs to know which shard group this execution runs on
         job.tile.obs["bank_ids"] = list(pl.bank_ids)
+        if self.prefetch is not None:
+            # double buffering: stage the next queued tile's transfer so it
+            # lands while this tile's execution traverses planes (the job
+            # being admitted may still sit in _queue during a drain scan)
+            nxt = next((j.tile for j in self._queue
+                        if j is not job and not j.cancelled), None)
+            if nxt is not None:
+                self.prefetch(nxt)
         try:
             result = job.execute(job.tile)
         except FaultError as exc:

@@ -10,14 +10,18 @@ import subprocess
 import sys
 import textwrap
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import given, settings, st
 
 pytest.importorskip("repro.dist.bankmesh",
                     reason="repro.dist not present in this tree")
 
 from repro.core import make_dataset, multibank_colskip_sort
-from repro.dist.bankmesh import MeshBankPool
+from repro.dist.bankmesh import MeshBankPool, collective_rounds, make_bank_mesh
+from repro.kernels.colskip.kernel import colskip_machine
 from repro.launch.sortserve import check_against_oracle, make_workload
 from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
 
@@ -104,3 +108,122 @@ def test_mesh_pool_geometry_and_kmin_early_exit():
     kmin = eng.submit([SortRequest("kmin", v.copy(), k=4)])[0]
     assert kmin.cycles < full.cycles          # k-early-exit drain
     assert check_against_oracle(SortRequest("kmin", v.copy(), k=4), kmin)
+
+
+# ------------------------------------------------ hierarchical hosts x banks
+_HOSTS_BODY = """
+    import numpy as np
+    from repro.dist.bankmesh import collective_rounds, make_bank_mesh
+    from repro.launch.sortserve import check_against_oracle, make_workload
+    from repro.sortserve import EngineConfig, SortRequest, SortServeEngine
+
+    # topology: 4 forced host-platform devices fold into a DCN-hosts over
+    # ICI-banks 2x2 mesh; the flat row-major device order matches the
+    # single-axis mesh so shard placement is identical
+    mesh = make_bank_mesh(hosts=2)
+    assert mesh.devices.shape == (2, 2)
+    assert mesh.axis_names == ("hosts", "banks")
+
+    geo = dict(tile_rows=4, min_bucket=8, banks=4, bank_width=64,
+               bank_rows=4, sim_width_cap=4096, cache_size=0)
+    local = SortServeEngine(EngineConfig(backends=("colskip",), **geo))
+    reqs = make_workload(16, min_len=8, max_len=128, seed=11,
+                         ops=("sort", "argsort", "kmin"))
+    resp_l = local.submit([SortRequest(q.op, q.payload.copy(), k=q.k)
+                           for q in reqs])
+
+    # fuse sweep on the 2-host topology: responses bit-identical to the
+    # local pool for every fuse; only collectives.rounds moves
+    per_fuse = {}
+    for fuse in (1, 2, 4):
+        eng = SortServeEngine(EngineConfig(
+            backends=("colskip_mesh",), mesh=True, mesh_hosts=2, fuse=fuse,
+            **geo))
+        resp_m = eng.submit([SortRequest(q.op, q.payload.copy(), k=q.k)
+                             for q in reqs])
+        for q, a, b in zip(reqs, resp_l, resp_m):
+            assert a.cycles == b.cycles, (fuse, q.op, a.cycles, b.cycles)
+            assert a.column_reads == b.column_reads
+            if a.values is not None:
+                assert np.array_equal(a.values, b.values)
+            if a.indices is not None:
+                assert np.array_equal(a.indices, b.indices)
+            assert check_against_oracle(q, b), (fuse, q.op, q.n)
+        tm = eng.telemetry()
+        assert tm["scheduler"] == local.telemetry()["scheduler"]
+        per_fuse[fuse] = tm["collectives"]
+
+    base = per_fuse[1]
+    assert base["rounds"] == base["unfused_rounds"] > 0
+    assert base["planes"] > 0 and base["round_cr"] == 1.0
+    for fuse in (2, 4):
+        c = per_fuse[fuse]
+        # fuse changes ONLY the manager round count: planes traversed and
+        # the one-psum-per-plane equivalent are invariant
+        assert c["planes"] == base["planes"], fuse
+        assert c["unfused_rounds"] == base["unfused_rounds"], fuse
+        assert c["rounds"] < base["rounds"], fuse
+        assert c["round_cr"] > 1.0
+    assert per_fuse[4]["rounds"] < per_fuse[2]["rounds"]
+    assert per_fuse[2]["round_cr"] >= 1.5          # w=32 acceptance floor
+
+    # deterministic double-buffer check: every tile needs the whole pool
+    # and all arrive at vt 0, so admission is strictly serial FIFO — each
+    # admit after the first sees exactly one successor chain to stage
+    from repro.sortserve.batcher import Tile
+    eng = SortServeEngine(EngineConfig(
+        backends=("colskip_mesh",), mesh=True, mesh_hosts=2, fuse=2, **geo))
+    rng = np.random.default_rng(5)
+    tiles = [Tile(op="sort",
+                  data=rng.integers(0, 1 << 32, (4, 256), dtype=np.uint64)
+                  .astype(np.uint32), k=None, entries=[], pad_rows=4)
+             for _ in range(6)]
+    eng.scheduler.feed(tiles, eng._execute, at=0.0)
+    eng.scheduler.pump()
+    c2 = eng.telemetry()["collectives"]
+    # tiles 2..5's admits stage their successors; tiles 3..6 then run on a
+    # pre-staged transfer (tile 1 admits with an empty queue, tile 6 has
+    # no successor)
+    assert c2["prefetch_staged"] == 4, c2
+    assert c2["prefetch_hits"] == 4, c2
+    print("OK")
+"""
+
+
+def test_mesh_pool_parity_2_hosts_x_2_devices():
+    """Hierarchical hosts x banks mesh, fuse in {1,2,4}: bit-identical."""
+    code = ('import os\n'
+            'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"\n'
+            'import sys; sys.path.insert(0, "src")\n') + textwrap.dedent(_HOSTS_BODY)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+# ------------------------------------------------------- fused-round sweep
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(("random", "dupes")),
+       n=st.sampled_from([17, 33, 64]),
+       k=st.sampled_from([0, 2]),
+       packed=st.booleans(),
+       fuse=st.sampled_from([2, 4]),
+       seed=st.integers(0, 999))
+def test_property_fuse_never_changes_results(kind, n, k, packed, fuse, seed):
+    """The speculative tree is exact: any fuse's masks/positions/CR/drain
+    telemetry are bit-identical to the one-round-per-plane walk; only the
+    statically-accounted collective round count changes."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << 16, size=(2, n), dtype=np.uint64)
+    if kind == "dupes":
+        x = x % 5
+    u = jnp.asarray(x.astype(np.uint32))
+    base = colskip_machine(u, 16, k, n, packed=packed, fuse=1)
+    got = colskip_machine(u, 16, k, n, packed=packed, fuse=fuse)
+    for field, a, b in zip(("sorted", "out_pos", "crs", "drains"), base, got):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (field, fuse)
+    r1 = collective_rounds(16, n, fuse=1)
+    rf = collective_rounds(16, n, fuse=fuse)
+    assert rf["planes"] == r1["planes"]                 # work is invariant
+    assert rf["unfused_rounds"] == r1["unfused_rounds"]
+    assert rf["rounds"] < r1["rounds"]                  # rounds are not

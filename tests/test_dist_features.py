@@ -62,6 +62,52 @@ def test_ef_topk_gradient_compression():
     """)
 
 
+def test_ef_topk_energy_schedule():
+    """Autotuned ratio: opens with residual energy, exact pmean at 1.0."""
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compress import ef_topk_psum_auto
+
+        mesh = jax.make_mesh((4,), ("data",))
+        def mk(base):
+            def f(g, e):
+                return ef_topk_psum_auto(g, e, base_ratio=base,
+                                         axis_name="data")
+            return jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=(P("data"), P("data")),
+                out_specs=(P("data"), P("data"), P())))
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        z = jnp.zeros((64,), jnp.float32)
+
+        # base_ratio=1.0: selection is total — reduced/n == pmean exactly,
+        # zero residual, schedule pinned at 1.0
+        red, err, r = mk(1.0)(g, z)
+        pmean = np.asarray(jax.jit(jax.shard_map(
+            lambda x: jax.lax.pmean(x, "data"), mesh=mesh,
+            in_specs=P("data"), out_specs=P("data")))(g))
+        assert np.array_equal(np.asarray(red) / 4.0, pmean)
+        assert np.array_equal(np.asarray(err), np.zeros(64, np.float32))
+        assert float(np.asarray(r)) == 1.0
+
+        # zero residual: the schedule sits at base_ratio and matches the
+        # fixed-ratio path's selection count
+        red, err, r = mk(0.25)(g, z)
+        assert abs(float(np.asarray(r)) - 0.25) < 1e-6
+        assert int((np.abs(np.asarray(err)) < 1e-9).sum()) == 16
+
+        # energetic residual: the ratio opens past base so the backlog
+        # flushes (monotone in E_err / E_grad)
+        _, _, r_hot = mk(0.25)(g, 4.0 * g)
+        assert float(np.asarray(r_hot)) > 0.25
+        print("OK")
+    """)
+
+
 def test_pipeline_parallel_matches_sequential():
     _run("""
         import os
