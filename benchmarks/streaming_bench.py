@@ -490,6 +490,139 @@ def _bench_degraded(report):
     return ok
 
 
+def _bench_fleet(report):
+    """Fleet scale-out rows (the BENCH_10 acceptance surface).
+
+    The BENCH_5 overload trace (one 256-wide tile per 150 cycles, ~1.7x a
+    single 8-bank pool's capacity) served by 1 vs 2 engine replicas behind
+    a :class:`FleetRouter`, in the §V cycle domain: ``router.select``
+    drives placement per arrival, each replica's own event scheduler
+    serves cost-model tiles under the BENCH_5 shed watermarks, one
+    ``pump`` per replica replays the trace.  A single replica sheds the
+    over-capacity ~40%; two replicas absorb the whole trace — the
+    acceptance gate is >=1.5x served tiles/s with a lower served p99."""
+    from repro.sortserve import FleetRouter
+
+    trace = [(i * 150.0, 256) for i in range(600)]
+
+    def replica():
+        return SortServeEngine(EngineConfig(
+            backends=("numpy",), tile_rows=ROWS, banks=8, bank_width=256,
+            bank_rows=ROWS, sim_width_cap=512, cache_size=0,
+            admission=WatermarkPolicy(high_watermark=32, shed=True,
+                                      retry_after_vt=4000.0)))
+
+    rows = {}
+    for n_rep in (1, 2):
+        router = FleetRouter([replica() for _ in range(n_rep)], seed=7)
+        scheds = [rep.engine.scheduler for rep in router.replicas]
+        ex = ModelExec()
+        lat, shed, arrive = [], [0], {}
+
+        def make_sink(sched):
+            def sink(tile, result, exc):
+                if exc is not None:
+                    shed[0] += 1
+                else:
+                    lat.append(sched.vt - arrive[id(tile)])
+            return sink
+
+        sinks = [make_sink(s) for s in scheds]
+        for t, w in trace:
+            i = router.select(op="sort", n=w, now=t)
+            tile = _tile(w)
+            arrive[id(tile)] = t
+            scheds[i].feed([tile], ex, sink=sinks[i], at=t, strict=False)
+        for s in scheds:
+            s.pump()
+        makespan = max(s.telemetry()["continuous"]["makespan_vt"]
+                       for s in scheds)
+        q = _quantiles_us(np.asarray(lat)) if lat \
+            else {50: 0.0, 95: 0.0, 99: 0.0}
+        tps = _tiles_per_s(len(lat), makespan)
+        rows[n_rep] = (q, tps, len(lat), shed[0])
+        report(
+            name=f"streaming/fleet_{n_rep}replica",
+            us_per_call=q[99],
+            derived=(f"served={len(lat)}/{len(trace)} shed={shed[0]} "
+                     f"p50={q[50]:.0f}us p99={q[99]:.0f}us "
+                     f"tiles_s={tps:.0f}"),
+        )
+    (q1, t1, _, sh1), (q2, t2, _, sh2) = rows[1], rows[2]
+    ratio = t2 / t1 if t1 else float("inf")
+    ok = ratio >= 1.5 and q2[99] < q1[99]
+    report(
+        name="streaming/fleet_scaleout",
+        us_per_call=q2[99],
+        derived=(f"tiles_s_ratio={ratio:.2f}x "
+                 f"p99 {q1[99]:.0f}->{q2[99]:.0f}us shed {sh1}->{sh2} "
+                 + ("PASS" if ok else "MISS")),
+    )
+    return ok
+
+
+def _bench_rolling_restart(report):
+    """Rolling-restart row: warm-started replica swaps under live traffic.
+
+    Two numpy-only replicas serve the canonical 120-request workload in
+    chunks; in the rolling run each slot is restarted in turn midway,
+    prewarmed from the fleet's merged warm-state artifact, while the
+    sibling absorbs traffic.  Acceptance: the restart run serves every
+    request oracle-correct with **zero shed increase** over the steady
+    run (both 120/120, no sheds, no failures)."""
+    from repro.launch.sortserve import check_against_oracle, make_workload
+    from repro.sortserve import FleetRouter
+
+    def replica():
+        return SortServeEngine(EngineConfig(
+            backends=("numpy",), tile_rows=8, banks=8, bank_width=256,
+            bank_rows=8, sim_width_cap=512, cache_size=0))
+
+    rows, ok = {}, True
+    for mode in ("steady", "rolling"):
+        router = FleetRouter([replica(), replica()],
+                             engine_factory=replica, seed=0)
+        reqs = make_workload(120, min_len=16, max_len=512, seed=5)
+        served = mismatches = 0
+        t0 = time.perf_counter()
+        for ci in range(0, len(reqs), 20):
+            if mode == "rolling" and ci in (40, 80):
+                router.restart(0 if ci == 40 else 1,
+                               warm_state=router.save_warm_state())
+            chunk = reqs[ci:ci + 20]
+            resps, _fails = router.serve(chunk)
+            for q_req, r in zip(chunk, resps):
+                if r is not None:
+                    served += 1
+                    mismatches += not check_against_oracle(q_req, r)
+        dt = time.perf_counter() - t0
+        telem = router.telemetry()
+        rows[mode] = telem
+        row_ok = (served == len(reqs) and mismatches == 0
+                  and telem["shed"] == 0 and telem["failed"] == 0
+                  and (mode == "steady" or telem["restarts"] == 2))
+        ok = ok and row_ok
+        report(
+            name=f"streaming/fleet_{mode}",
+            us_per_call=dt * 1e6 / len(reqs),
+            derived=(f"{len(reqs) / dt:.0f}req/s "
+                     f"served={served}/{len(reqs)} shed={telem['shed']} "
+                     f"restarts={telem['restarts']} "
+                     f"redirects={telem['redirects']} "
+                     + ("PASS" if row_ok else "MISS")),
+        )
+    shed_delta = rows["rolling"]["shed"] - rows["steady"]["shed"]
+    ok = ok and shed_delta == 0
+    report(
+        name="streaming/fleet_rolling_restart",
+        us_per_call=0.0,
+        derived=(f"shed_delta={shed_delta} "
+                 f"restarts={rows['rolling']['restarts']} "
+                 + ("PASS" if ok else "MISS")),
+    )
+    return ok
+
+
 def run(report, mesh: bool = False):
     # Poisson steady traffic: ~70% offered load on the 8-bank pool
     trace_p = poisson_trace(400, seed=11, mean_gap=2400.0)
@@ -511,6 +644,12 @@ def run(report, mesh: bool = False):
     # degraded-mode serving: healthy vs dead-bank vs transient storm, every
     # request recovered oracle-correct (the BENCH_8 acceptance rows)
     _bench_degraded(report)
+    # fleet scale-out: the overload trace through 1 vs 2 replicas behind
+    # the FleetRouter (the BENCH_10 acceptance rows — >=1.5x tiles/s)
+    _bench_fleet(report)
+    # rolling restart: warm-started replica swaps under live traffic with
+    # zero shed increase (the BENCH_10 rolling-restart row)
+    _bench_rolling_restart(report)
     if mesh:
         _bench_real_session(report, mesh=True)
 

@@ -11,7 +11,9 @@ numpy oracle, and prints the aggregate telemetry (optionally to ``--json``).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 import sys
 import time
 
@@ -87,6 +89,74 @@ def apply_hw_profile(path: str) -> dict:
     return prof
 
 
+def _serve_fleet(args, router, reqs) -> int:
+    """Serve the workload through a :class:`FleetRouter` fleet.
+
+    With ``--rolling-restart`` the workload goes through in chunks and
+    each replica slot is restarted in turn at a chunk boundary, prewarmed
+    from the fleet's merged warm-state artifact, while the siblings keep
+    serving — the smoke gate is every request served oracle-correct with
+    zero fleet-level sheds."""
+    n_chunks = max(6, args.replicas + 2) if args.rolling_restart else 1
+    csize = (len(reqs) + n_chunks - 1) // n_chunks
+    restart_before = ({1 + j: j for j in range(args.replicas)}
+                      if args.rolling_restart else {})
+    t0 = time.time()
+    resps, fails = [], []
+    for ci in range(n_chunks):
+        slot = restart_before.get(ci)
+        if slot is not None:
+            router.restart(slot, warm_state=router.save_warm_state())
+        got, bad = router.serve(reqs[ci * csize:(ci + 1) * csize])
+        resps += got
+        fails += bad
+    dt = time.time() - t0
+
+    n_served = sum(r is not None for r in resps)
+    mismatches = sum(r is not None and not check_against_oracle(q, r)
+                     for q, r in zip(reqs, resps))
+    fleet = router.telemetry()
+    backends_used = sorted({b for rep in router.replicas
+                            for b in rep.engine.telemetry()["per_backend"]})
+    print(f"served {n_served} requests in {dt:.2f}s "
+          f"({n_served / dt:.1f} req/s incl compile) "
+          f"across {fleet['replicas']} replicas"
+          + (f"  [{len(fails)} failed fleet-wide]" if fails else ""))
+    print(f"ops: {','.join(sorted({q.op for q in reqs}))}  "
+          f"backends: {','.join(backends_used)}")
+    print(f"oracle mismatches: {mismatches}")
+    print(f"fleet: shed={fleet['shed']} failovers={fleet['failovers']} "
+          f"redirects={fleet['redirects']} restarts={fleet['restarts']} "
+          f"quarantines={fleet['health']['quarantines']}")
+    for name, row in fleet["per_replica"].items():
+        print(f"  {name}: {row['state']} routed={row['routed']} "
+              f"served={row['served']} shed={row['shed']} "
+              f"queue_depth={row['queue_depth']}")
+    if args.warm_state:
+        router.save_warm_state(args.warm_state)
+        print(f"warm state -> {args.warm_state}")
+    if args.snapshot_out:
+        router.dump_snapshot(args.snapshot_out)
+        print(f"snapshot -> {args.snapshot_out}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(fleet, f, indent=2, sort_keys=True)
+        print(f"telemetry -> {args.json}")
+
+    if args.smoke:
+        assert mismatches == 0, f"{mismatches} responses differ from oracle"
+        assert n_served == len(reqs), \
+            f"served {n_served}/{len(reqs)} (fleet failures: {fails[:3]})"
+        assert fleet["shed"] == 0, f"{fleet['shed']} fleet-level sheds"
+        if args.rolling_restart:
+            assert fleet["restarts"] == args.replicas, \
+                f"{fleet['restarts']} restarts != {args.replicas} replicas"
+            print("ROLLING RESTART SMOKE OK")
+        print("FLEET SMOKE OK")
+        print("SMOKE OK")
+    return 0 if mismatches == 0 and n_served == len(reqs) else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -146,6 +216,20 @@ def main(argv=None):
     ap.add_argument("--fault_rate", type=float, default=0.05,
                     help="per-execution transient fault probability under "
                          "--chaos (default 0.05)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a FleetRouter over N independent "
+                         "engine replicas (telemetry-driven placement, "
+                         "RetryAfter-aware failover); 1 = single engine")
+    ap.add_argument("--warm-state", default="", dest="warm_state",
+                    help="warm-state artifact path: loaded (if it exists) "
+                         "to prewarm every replica before serving, and "
+                         "written back (merged across replicas) after")
+    ap.add_argument("--rolling-restart", action="store_true",
+                    dest="rolling_restart",
+                    help="with --replicas >= 2: restart each replica slot "
+                         "in turn midway through the workload, prewarmed "
+                         "from the fleet's merged warm state, while the "
+                         "siblings keep serving")
     ap.add_argument("--json", default="", help="write telemetry JSON here")
     ap.add_argument("--trace", default="",
                     help="enable the flight recorder and write the Chrome "
@@ -183,12 +267,27 @@ def main(argv=None):
                          for b in backends)
     if args.shed_overload and not args.high_watermark:
         ap.error("--shed_overload needs --high_watermark N")
-    admission = None
-    if args.high_watermark:
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.rolling_restart and args.replicas < 2:
+        ap.error("--rolling-restart needs --replicas >= 2 (a sibling must "
+                 "absorb traffic while a slot restarts)")
+    if args.replicas > 1 and (args.mesh or args.trace or args.metrics_out
+                              or args.chaos is not None):
+        ap.error("--replicas > 1 drives independent local engines; use "
+                 "--mesh/--trace/--metrics-out/--chaos one engine at a time")
+
+    def make_admission():
+        if not args.high_watermark:
+            return None
         from repro.sortserve import WatermarkPolicy
-        admission = WatermarkPolicy(high_watermark=args.high_watermark,
-                                    low_watermark=args.low_watermark,
-                                    shed=args.shed_overload)
+        # admission policies carry hysteresis state: one fresh instance
+        # per engine, never shared across replicas
+        return WatermarkPolicy(high_watermark=args.high_watermark,
+                               low_watermark=args.low_watermark,
+                               shed=args.shed_overload)
+
+    admission = make_admission()
     tracer = None
     if args.trace:
         from repro.obs import Tracer
@@ -225,7 +324,31 @@ def main(argv=None):
         admission=admission,
         faults=faults,
     )
+    if args.replicas > 1:
+        from repro.sortserve import FleetRouter
+
+        def fresh_engine():
+            return SortServeEngine(
+                dataclasses.replace(cfg, admission=make_admission()))
+
+        router = FleetRouter([fresh_engine() for _ in range(args.replicas)],
+                             engine_factory=fresh_engine, seed=args.seed)
+        if args.warm_state and os.path.exists(args.warm_state):
+            stats = router.load_warm_state(args.warm_state)
+            print(f"warm state <- {args.warm_state} "
+                  f"({stats['signatures']} signatures, "
+                  f"{stats['priors']} priors, {stats['prewarmed']} prewarmed)")
+        reqs = make_workload(args.requests, args.min_len, args.max_len,
+                             args.seed)
+        return _serve_fleet(args, router, reqs)
+
     engine = SortServeEngine(cfg)
+    if args.warm_state and os.path.exists(args.warm_state):
+        from repro.sortserve import load_warm_state
+        stats = engine.apply_warm_state(load_warm_state(args.warm_state))
+        print(f"warm state <- {args.warm_state} "
+              f"({stats['signatures']} signatures, "
+              f"{stats['priors']} priors, {stats['prewarmed']} prewarmed)")
     if profile:
         n_pri = engine.policy.load_priors(profile.get("priors", []))
         n_cal = engine._calib.seed_rows(profile.get("calibration", []))
@@ -313,6 +436,10 @@ def main(argv=None):
     if args.snapshot_out:
         engine.dump_snapshot(args.snapshot_out, source="launch.sortserve")
         print(f"snapshot -> {args.snapshot_out}")
+    if args.warm_state:
+        from repro.sortserve import save_warm_state
+        save_warm_state(engine, args.warm_state)
+        print(f"warm state -> {args.warm_state}")
     if args.json:
         engine.dump_telemetry(args.json)
         print(f"telemetry -> {args.json}")

@@ -27,8 +27,10 @@ schema whose every section has an exact merge rule:
 
 Merging is associative and commutative, so folding N snapshots in any
 partition order yields the same fleet view (pinned by a hypothesis
-property in ``tests/test_obs_export.py``) — the substrate a fleet router
-needs to treat "three replicas" and "one bigger replica" uniformly.
+property in ``tests/test_obs_export.py``) — the substrate
+:meth:`repro.sortserve.fleet.FleetRouter.snapshot` folds to treat
+"three replicas" and "one bigger replica" uniformly (retired engines
+from rolling restarts included).
 
 Capture via :meth:`SortServeEngine.telemetry_snapshot` (which holds the
 engine lock), persist with :meth:`TelemetrySnapshot.dump` /

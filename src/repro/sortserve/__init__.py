@@ -27,7 +27,13 @@ up, turning the repo's sorting engines into a request-level service:
     event-clock admission + overload stats),
   * :mod:`faults`    — seeded bank fault injection (:class:`FaultPlan`),
     the result-verification guard, and the :class:`BankHealth`
-    quarantine/probation tracker behind ``EngineConfig(faults=...)``.
+    quarantine/probation tracker behind ``EngineConfig(faults=...)``,
+  * :mod:`fleet`     — N engine replicas behind a telemetry-driven
+    :class:`FleetRouter` (``window.*`` + per-class cost EMAs as the
+    placement signal, ``RetryAfter``-aware failover, replica-granularity
+    quarantine) with the versioned warm-state artifact
+    (:func:`save_warm_state` / :func:`load_warm_state`) that lets a fresh
+    replica start with a prewarmed executor cache and warmed cost priors.
 """
 
 from .backends import BACKENDS, CostPolicy, resolve_backends, solve_numpy
@@ -39,6 +45,16 @@ from .engine import (
     RetryAfter,
     SortServeEngine,
     SortSession,
+)
+from .fleet import (
+    FleetError,
+    FleetRouter,
+    FleetSaturated,
+    NoReplicaAvailable,
+    WarmStateError,
+    load_warm_state,
+    merge_warm_states,
+    save_warm_state,
 )
 from .faults import (
     BankDeadError,
@@ -76,6 +92,10 @@ __all__ = [
     "FaultError",
     "FaultInjector",
     "FaultPlan",
+    "FleetError",
+    "FleetRouter",
+    "FleetSaturated",
+    "NoReplicaAvailable",
     "OP_KINDS",
     "RecoveryPolicy",
     "RetryAfter",
@@ -86,8 +106,12 @@ __all__ = [
     "SortSession",
     "Tile",
     "TransientFaultError",
+    "WarmStateError",
     "WatermarkPolicy",
     "encode_payload",
+    "load_warm_state",
+    "merge_warm_states",
+    "save_warm_state",
     "pow2_bucket",
     "resolve_backends",
     "solve_numpy",

@@ -646,30 +646,41 @@ class CostPolicy:
                 (1.0 - self.ema_alpha) * prev + self.ema_alpha * per_row)
             self._obs[key] = self._obs.get(key, 0) + 1
 
-    def export_priors(self) -> list[dict]:
-        """The engine-global measured EMAs as a portable profile (the
-        ``priors`` block of an hw_tune profile) — class-private EMAs are
-        deliberately excluded, they describe one session's traffic."""
+    def export_priors(self, include_classes: bool = False) -> list[dict]:
+        """The measured EMAs as a portable profile (the ``priors`` block
+        of an hw_tune profile).  By default class-private EMAs are
+        excluded — they describe one session's traffic — matching the
+        hw_tune contract.  ``include_classes=True`` keeps them (with a
+        ``traffic_class`` field on every row) for warm-state artifacts
+        (:mod:`repro.sortserve.fleet`), where per-class priors are exactly
+        the point of persisting."""
         out = []
         for key in sorted(self._ema, key=repr):
             backend, op, n, k, cls = key
-            if cls is not None:
+            if cls is not None and not include_classes:
                 continue
-            out.append({"backend": backend, "op": op, "n": n, "k": k,
-                        "s_per_row": self._ema[key],
-                        "samples": self._obs.get(key, 0)})
+            row = {"backend": backend, "op": op, "n": n, "k": k,
+                   "s_per_row": self._ema[key],
+                   "samples": self._obs.get(key, 0)}
+            if include_classes:
+                row["traffic_class"] = cls
+            out.append(row)
         return out
 
     def load_priors(self, priors) -> int:
-        """Seed the global EMA from a measured profile
-        (``scripts/hw_tune.py``).  Live measurements outrank the profile:
+        """Seed EMAs from a measured profile (``scripts/hw_tune.py`` or a
+        warm-state artifact).  Live measurements outrank the profile:
         a signature that already has samples is left alone, and every
         loaded prior keeps updating from real traffic through
-        :meth:`observe`.  Returns the number of signatures seeded."""
+        :meth:`observe`.  Rows without a ``traffic_class`` field seed the
+        engine-global prior; rows with one seed that class's private EMA.
+        Returns the number of signatures seeded."""
         count = 0
         for p in priors:
+            cls = p.get("traffic_class")
             key = (p["backend"], p["op"], int(p["n"]),
-                   None if p.get("k") is None else int(p["k"]), None)
+                   None if p.get("k") is None else int(p["k"]),
+                   None if cls is None else str(cls))
             if key in self._ema:
                 continue
             self._ema[key] = float(p["s_per_row"])

@@ -787,6 +787,53 @@ class SortServeEngine:
                 f.write(text)
         return text
 
+    # ----------------------------------------------------------- warm state
+    def export_warm_state(self) -> dict:
+        """The raw warm-state blocks — per-traffic-class tile-signature
+        menus, measured :class:`CostPolicy` EMAs (class rows included),
+        and calibration profile rows — taken under the engine lock.
+        :func:`repro.sortserve.fleet.save_warm_state` wraps this in the
+        versioned artifact envelope; the blocks themselves carry only
+        JSON-native values, sorted deterministically."""
+        with self._lock:
+            menus = {cls: [list(sig) for sig in sorted(sigs, key=repr)]
+                     for cls, sigs in sorted(self._class_menus.items())}
+            return {"menus": menus,
+                    "priors": self.policy.export_priors(include_classes=True),
+                    "calibration": self._calib.profile_rows()}
+
+    def apply_warm_state(self, state: dict) -> dict:
+        """Seed this engine from warm-state blocks (see
+        :meth:`export_warm_state`): union the signature menus into the
+        class prewarm menus, seed cost-EMA priors (live measurements
+        outrank the artifact), seed calibration cells, then prewarm the
+        executor cache for every loaded class.  Nothing here executes a
+        tile — the engine takes its first request with warmed executors
+        and warmed priors but zero cold-path EMA observations.  Returns
+        ``{classes, signatures, priors, calibration, prewarmed}`` counts."""
+        with self._lock:
+            menus = state.get("menus", {})
+            signatures = 0
+            for cls, menu in sorted(menus.items()):
+                dest = self._class_menus.setdefault(str(cls), set())
+                for op, b, n, k, hint in menu:
+                    sig = (str(op), int(b), int(n),
+                           None if k is None else int(k),
+                           None if hint is None else str(hint))
+                    if sig not in dest:
+                        dest.add(sig)
+                        signatures += 1
+            n_priors = self.policy.load_priors(state.get("priors", []))
+            n_calib = self._calib.seed_rows(state.get("calibration", []))
+            before = self._exec_stats["prewarmed"]
+        for cls in sorted(menus):
+            self._prewarm(str(cls))
+        with self._lock:
+            prewarmed = self._exec_stats["prewarmed"] - before
+        return {"classes": len(menus), "signatures": signatures,
+                "priors": n_priors, "calibration": n_calib,
+                "prewarmed": prewarmed}
+
     def dump_trace(self, path: str) -> dict:
         """Export the flight recorder as Chrome trace-event JSON (viewable
         at https://ui.perfetto.dev): the wall-clock request spans and the

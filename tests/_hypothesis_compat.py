@@ -1,16 +1,32 @@
-"""Optional-hypothesis shim: property tests skip (not error) when absent.
+"""Optional-hypothesis shim: seeded-example mode when hypothesis is absent.
 
 Usage in a test module::
 
     from _hypothesis_compat import given, settings, st
 
 When hypothesis is installed these are the real objects.  When it is not,
-``given``/``settings`` become decorators that attach ``pytest.mark.skip``
-and ``st`` accepts any strategy-construction call, so the module still
-imports and its non-property tests run normally.
+the shim degrades to **seeded-example mode** instead of skipping: ``st``
+builds tiny deterministic strategies, and ``given`` runs the test body a
+bounded number of times (``SORTSERVE_COMPAT_EXAMPLES``, default 5, never
+more than ``settings(max_examples=...)``) with values drawn from an RNG
+seeded by the test's qualified name — the property still executes on bare
+installs, reproducibly, just with fewer examples and no shrinking.  The
+first example is drawn *minimal* (lower bounds, empty-ish collections,
+first choice) so the degenerate corner every sweep should cover is always
+covered.
+
+A strategy surface the fallback does not model raises
+``UnsupportedStrategy`` at draw time, which ``given`` converts to a
+skip — unsupported properties degrade to the old behaviour instead of
+failing spuriously.
 """
 
 from __future__ import annotations
+
+import inspect
+import os
+import random
+import zlib
 
 import pytest
 
@@ -20,25 +36,214 @@ try:
 except ModuleNotFoundError:  # pragma: no cover - exercised on bare installs
     HAVE_HYPOTHESIS = False
 
-    def _skip_deco(*_args, **_kwargs):
-        def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
-        return deco
+    _DEFAULT_EXAMPLES = int(os.environ.get("SORTSERVE_COMPAT_EXAMPLES", "5"))
 
-    given = _skip_deco
-    settings = _skip_deco
+    class UnsupportedStrategy(Exception):
+        """The fallback cannot draw from this strategy surface."""
 
-    class _AnyStrategy:
-        """Swallows st.lists(...), st.integers(...).map(f), etc. —
-        every strategy call and chained combinator yields the same inert
-        object, so module-level strategy definitions import cleanly."""
+    class _Strategy:
+        """A deterministic drawable: ``draw(rng, minimal)`` -> value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng, minimal=False):
+            return self._draw(rng, minimal)
+
+        def map(self, f):
+            return _Strategy(lambda rng, m: f(self._draw(rng, m)))
+
+        def filter(self, pred):
+            def draw(rng, minimal):
+                v = self._draw(rng, minimal)
+                if pred(v):
+                    return v
+                for _ in range(200):
+                    v = self._draw(rng, False)
+                    if pred(v):
+                        return v
+                raise UnsupportedStrategy(
+                    "filter predicate never satisfied in 200 draws")
+            return _Strategy(draw)
+
+    def _coerce(obj) -> _Strategy:
+        if isinstance(obj, _Strategy):
+            return obj
+        raise UnsupportedStrategy(f"not a fallback strategy: {obj!r}")
+
+    class _St:
+        """The subset of ``hypothesis.strategies`` the repo's sweeps use."""
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2 ** 31) if min_value is None else int(min_value)
+            hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+            return _Strategy(
+                lambda rng, m: lo if m else rng.randint(lo, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(
+                lambda rng, m: False if m else rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_kw):
+            lo = 0.0 if min_value is None else float(min_value)
+            hi = 1.0 if max_value is None else float(max_value)
+            return _Strategy(
+                lambda rng, m: lo if m else rng.uniform(lo, hi))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            elements = _coerce(elements)
+            cap = min_size + 10 if max_size is None else max_size
+
+            def draw(rng, minimal):
+                size = min_size if minimal else rng.randint(min_size, cap)
+                return [elements.example(rng, minimal) for _ in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            if not seq:
+                raise UnsupportedStrategy("sampled_from an empty sequence")
+            return _Strategy(
+                lambda rng, m: seq[0] if m else seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def tuples(*strategies):
+            strategies = [_coerce(s) for s in strategies]
+            return _Strategy(lambda rng, m: tuple(
+                s.example(rng, m) for s in strategies))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng, m: value)
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng, m: None)
+
+        @staticmethod
+        def one_of(*strategies):
+            if len(strategies) == 1 and isinstance(strategies[0],
+                                                   (list, tuple)):
+                strategies = tuple(strategies[0])
+            strategies = [_coerce(s) for s in strategies]
+
+            def draw(rng, minimal):
+                s = strategies[0] if minimal else \
+                    strategies[rng.randrange(len(strategies))]
+                return s.example(rng, minimal)
+            return _Strategy(draw)
+
+        @staticmethod
+        def fixed_dictionaries(mapping):
+            mapping = {k: _coerce(v) for k, v in mapping.items()}
+            return _Strategy(lambda rng, m: {
+                k: v.example(rng, m) for k, v in mapping.items()})
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=None):
+            keys, values = _coerce(keys), _coerce(values)
+            cap = min_size + 5 if max_size is None else max_size
+
+            def draw(rng, minimal):
+                size = min_size if minimal else rng.randint(min_size, cap)
+                out = {}
+                for _ in range(size * 3):
+                    if len(out) >= size:
+                        break
+                    out[keys.example(rng, False)] = values.example(rng, False)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def builds(target, *args, **kwargs):
+            args = [_coerce(a) for a in args]
+            kwargs = {k: _coerce(v) for k, v in kwargs.items()}
+            return _Strategy(lambda rng, m: target(
+                *(a.example(rng, m) for a in args),
+                **{k: v.example(rng, m) for k, v in kwargs.items()}))
 
         def __getattr__(self, name):
-            return self
+            def missing(*_a, **_kw):
+                return _Strategy(lambda rng, m: (_ for _ in ()).throw(
+                    UnsupportedStrategy(f"st.{name} not modeled by the "
+                                        f"fallback shim")))
+            return missing
 
-        def __call__(self, *a, **kw):
-            return self
+    st = _St()
 
-    st = _AnyStrategy()
+    def _max_examples_of(fn) -> int:
+        cap = getattr(fn, "_compat_max_examples", None)
+        wrapped = getattr(fn, "__wrapped_test__", None)
+        if cap is None and wrapped is not None:
+            cap = getattr(wrapped, "_compat_max_examples", None)
+        if cap is None:
+            cap = _DEFAULT_EXAMPLES
+        return max(1, min(int(cap), _DEFAULT_EXAMPLES))
+
+    def given(*given_args, **given_kwargs):
+        """Seeded-example fallback for ``hypothesis.given``.
+
+        Positional strategies bind to the test's *rightmost* positional
+        parameters (hypothesis's rule), keyword strategies to their named
+        parameters; everything else (fixtures) stays visible to pytest via
+        an explicit ``__signature__``."""
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            names = [p.name for p in params]
+            kw_bound = set(given_kwargs)
+            pos_candidates = [n for n in names if n not in kw_bound]
+            pos_bound = pos_candidates[len(pos_candidates) - len(given_args):]
+            free = [p for p in params
+                    if p.name not in kw_bound and p.name not in pos_bound]
+
+            def wrapper(*args, **kwargs):
+                n_examples = _max_examples_of(wrapper)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = random.Random(seed)
+                for i in range(n_examples):
+                    minimal = i == 0
+                    try:
+                        drawn_pos = [_coerce(s).example(rng, minimal)
+                                     for s in given_args]
+                        drawn_kw = {k: _coerce(s).example(rng, minimal)
+                                    for k, s in given_kwargs.items()}
+                    except UnsupportedStrategy as exc:
+                        pytest.skip(f"hypothesis absent and fallback "
+                                    f"cannot draw: {exc}")
+                    try:
+                        fn(*args, *drawn_pos, **kwargs, **drawn_kw)
+                    except Exception as exc:
+                        note = (f"falsifying example #{i} (seeded fallback, "
+                                f"seed={seed}): args={drawn_pos!r} "
+                                f"kwargs={drawn_kw!r}")
+                        if hasattr(exc, "add_note"):
+                            exc.add_note(note)
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__dict__.update(getattr(fn, "__dict__", {}))
+            wrapper.__wrapped_test__ = fn
+            wrapper.__signature__ = sig.replace(parameters=free)
+            return wrapper
+        return deco
+
+    def settings(max_examples=None, **_kwargs):
+        """Records ``max_examples`` for the fallback ``given`` wrapper —
+        works in either decorator order (above or below ``given``)."""
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = int(max_examples)
+            return fn
+        return deco
 
 __all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

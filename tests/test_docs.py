@@ -19,9 +19,11 @@ import numpy as np
 
 from repro.sortserve import (
     EngineConfig,
+    FleetRouter,
     SortRequest,
     SortServeEngine,
     WatermarkPolicy,
+    save_warm_state,
 )
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -49,6 +51,10 @@ def flatten_keys(obj, prefix="") -> set[str]:
                 name = "<class>"
             elif prefix == "fault.per_bank.":
                 name = "<bank>"
+            elif prefix == "fleet.per_replica.":
+                name = "<replica>"
+            elif prefix == "warm_state.menus.":
+                name = "<class>"
             keys |= flatten_keys(v, f"{prefix}{name}.")
     elif isinstance(obj, list):
         for v in obj:
@@ -95,7 +101,23 @@ def live_keys() -> set[str]:
     s.feed(warm, flush=True)
     s.drain()
     return (flatten_keys(eng.telemetry())
-            | {f"session.{k}" for k in flatten_keys(s.telemetry())})
+            | {f"session.{k}" for k in flatten_keys(s.telemetry())}
+            | fleet_keys()
+            | flatten_keys(save_warm_state(eng), "warm_state."))
+
+
+def fleet_keys() -> set[str]:
+    """``fleet.*`` key set from a live two-replica router serve."""
+    def replica():
+        return SortServeEngine(EngineConfig(
+            backends=("numpy",), tile_rows=2, banks=2, bank_width=64,
+            bank_rows=2, sim_width_cap=64, cache_size=0))
+    router = FleetRouter([replica(), replica()], seed=0)
+    reqs = [SortRequest("sort", np.arange(16, dtype=np.uint32) + i)
+            for i in range(4)]
+    resps, fails = router.serve(reqs, traffic_class="docs")
+    assert not fails and all(r is not None for r in resps)
+    return flatten_keys(router.telemetry(), "fleet.")
 
 
 def test_telemetry_doc_matches_live_key_set():
